@@ -1,0 +1,67 @@
+"""Benchmark driver: one function per paper table/figure + kernel benches
++ the roofline summary.  Prints ``name,value,reference`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig9 --stats measured
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure keys (fig2,...,table1,"
+                         "kernels,roofline)")
+    ap.add_argument("--stats", default="preset",
+                    choices=["preset", "measured", "both"])
+    ap.add_argument("--roofline-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    from benchmarks.kernel_bench import ALL_KERNEL_BENCHES
+    from benchmarks.paper_figures import ALL_FIGURES
+
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(key):
+        return only is None or key in only
+
+    print("name,value,paper_reference")
+    sources = ["preset", "measured"] if args.stats == "both" else [args.stats]
+
+    for key, fn in ALL_FIGURES.items():
+        if not want(key):
+            continue
+        if key == "table1":
+            rows = fn()
+        else:
+            rows = []
+            for src in sources:
+                rows += fn(stats_source=src)
+        for name, val, ref in rows:
+            ref_s = "" if (isinstance(ref, float) and math.isnan(ref)) else f"{ref:.4g}"
+            print(f"{name},{val:.4f},{ref_s}")
+
+    if want("kernels"):
+        for key, fn in ALL_KERNEL_BENCHES.items():
+            for name, us, derived in fn():
+                d = "" if (isinstance(derived, float) and math.isnan(derived)) \
+                    else f"{derived:.4g}"
+                print(f"kernels.{name},{us:.2f},{d}")
+
+    if want("roofline"):
+        import os
+        if os.path.isdir(args.roofline_dir):
+            from repro.launch.roofline import load_rows
+            for r in load_rows(args.roofline_dir):
+                print(f"roofline.{r.arch}.{r.shape}.{r.mesh}.bound_s,"
+                      f"{r.bound_s:.4f},{r.dominant}")
+                print(f"roofline.{r.arch}.{r.shape}.{r.mesh}.useful_frac,"
+                      f"{r.useful_fraction:.4f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Full paper-analysis walkthrough: Fig. 2 histograms -> Fig. 3 savings ->
+Figs. 9-11 accelerator comparison, on both measured and paper-preset
+activation statistics.  This is the reproduction artifact behind
+EXPERIMENTS.md §Paper.
+
+  PYTHONPATH=src python examples/qeihan_analysis.py
+"""
+
+import numpy as np
+
+from benchmarks.paper_figures import (fig2_histograms, fig3_memory_savings,
+                                      fig9_memory_accesses, fig10_speedups,
+                                      fig11_energy)
+
+
+def show(rows, title):
+    print(f"\n== {title} ==")
+    for name, val, ref in rows:
+        ref_s = "" if (isinstance(ref, float) and np.isnan(ref)) \
+            else f"   [paper: {ref:.3g}]"
+        print(f"  {name:<44} {val:8.4f}{ref_s}")
+
+
+def main():
+    show(fig2_histograms("preset"), "Fig.2 exponent negativity (paper preset)")
+    show(fig2_histograms("measured"),
+         "Fig.2 exponent negativity (measured from our JAX paper nets)")
+    show(fig3_memory_savings("preset"), "Fig.3 estimated memory savings")
+    show(fig9_memory_accesses("preset"), "Fig.9 normalized memory accesses")
+    show(fig10_speedups("preset"), "Fig.10 speedups")
+    show(fig11_energy("preset"), "Fig.11 energy savings")
+
+
+if __name__ == "__main__":
+    main()

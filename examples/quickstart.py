@@ -1,0 +1,69 @@
+"""Quickstart: the QeiHaN technique end-to-end in 60 lines.
+
+1. LOG2-quantize activations (paper Eqs. 2-4) and look at the exponent
+   histogram (Fig. 2's observation: most exponents are negative),
+2. estimate the weight-memory savings that buys (Fig. 3),
+3. run the exact bit-plane shift-add GEMM and compare against float,
+4. swap a model's projections onto the quantized path and generate text.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (log2_quantize, negative_fraction, pruned_fraction,
+                        quantize_weights, shiftadd_matmul_bitplane,
+                        shiftadd_matmul_exact, to_bitplanes,
+                        weight_access_report)
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.models.quantize import quantize_model_params
+from repro.serving import greedy_generate
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # --- 1. LOG2 quantization of a typical post-norm activation tensor ----
+    x = jnp.asarray(rng.normal(0, 0.3, (128, 512)).astype(np.float32))
+    q = log2_quantize(x)
+    print(f"negative exponents: {float(negative_fraction(q)):.1%} "
+          f"(paper observes 36%..98% across DNNs)")
+    print(f"pruned (zero/small): {float(pruned_fraction(q)):.1%}")
+
+    # --- 2. the memory saving those negative exponents imply --------------
+    rep = weight_access_report(q)
+    print(f"estimated weight-bit savings: {float(rep.savings_element):.1%} "
+          f"element-granular (ASIC), {float(rep.savings_tile):.1%} "
+          f"tile-granular (TPU kernel)")
+
+    # --- 3. exact shift-add GEMM vs float GEMM ----------------------------
+    w = jnp.asarray(rng.normal(0, 0.1, (512, 256)).astype(np.float32))
+    qw = quantize_weights(w, channel_axis=-1)
+    y_int = shiftadd_matmul_bitplane(q, to_bitplanes(qw.q))
+    y_ref = shiftadd_matmul_exact(q, qw.q)
+    print(f"shift-add vs exact fixed-point: max diff "
+          f"{float(jnp.max(jnp.abs(y_int - y_ref))):.1f} "
+          f"(floor truncation, < K={x.shape[1]})")
+    y_float = (x @ w)
+    y_deq = y_int.astype(jnp.float32) * qw.scale.reshape(1, -1)
+    rel = float(jnp.mean(jnp.abs(y_deq - y_float)) /
+                jnp.mean(jnp.abs(y_float)))
+    print(f"quantized GEMM relative error vs float: {rel:.3f}")
+
+    # --- 4. a whole model on the QeiHaN path -------------------------------
+    cfg = get_smoke("smollm-135m").replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    qparams = quantize_model_params(cfg, params)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                cfg.vocab_size)
+    toks_f = greedy_generate(cfg, params, prompt, max_new=8)
+    toks_q = greedy_generate(cfg, qparams, prompt, max_new=8, quant=True)
+    print("float  generation:", toks_f[0].tolist())
+    print("qeihan generation:", toks_q[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

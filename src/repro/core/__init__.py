@@ -1,0 +1,18 @@
+"""QeiHaN core: LOG2 activation quantization + bit-plane shift-add GEMM."""
+
+from repro.core.access_model import AccessReport, needed_bits, weight_access_report
+from repro.core.bitplane import (from_bitplanes, pack_planes, plane_coefficients,
+                                 to_bitplanes, unpack_planes)
+from repro.core.logquant import (LogQuantized, log2_dequantize, log2_quantize,
+                                 log2_quantize_naive, negative_fraction,
+                                 pack_codes, pruned_fraction, unpack_codes,
+                                 zero_sentinel)
+from repro.core.shiftadd import (QuantizedLinearParams, calibrate_act_scale,
+                                 quantized_linear_apply, quantized_linear_init,
+                                 shift_product, shiftadd_matmul_bitplane,
+                                 shiftadd_matmul_elementwise,
+                                 shiftadd_matmul_exact)
+from repro.core.wquant import (QuantizedWeights, dequantize_weights,
+                               quantize_weights)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

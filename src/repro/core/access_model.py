@@ -1,0 +1,98 @@
+"""Memory-access accounting — paper §III (Fig. 3) and §VI-A (Fig. 9).
+
+The *estimated memory savings* is "the percentage of bits from the weights
+that can be ignored because the negative exponents of the base-2 activations
+render those bits useless when performing the bit-shifting operation".
+Pruned (zero/sentinel) activations are accounted separately, because the
+paper prunes them "in both the baseline and our proposal".
+
+Two fetch granularities:
+
+* ``element`` — the ASIC's bank-level model: each activation ``i`` touches
+  exactly ``needed(e_i) * M`` weight bits (paper Fig. 7).
+* ``tile``    — the TPU adaptation: the Pallas kernel decides per
+  ``(K-tile, plane)`` whether to DMA, so a plane is fetched for the whole
+  tile iff *any* activation in the tile needs it.  This is the traffic the
+  bit-plane kernel actually generates and is reported alongside the ASIC
+  number in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.logquant import LogQuantized, zero_sentinel
+
+__all__ = ["needed_bits", "AccessReport", "weight_access_report"]
+
+WEIGHT_BITS = 8
+
+
+def needed_bits(exp: jnp.ndarray, n_bits: int = 4,
+                weight_bits: int = WEIGHT_BITS) -> jnp.ndarray:
+    """Weight bits the D&S unit must fetch for one activation exponent.
+
+    * sentinel (pruned)      -> 0
+    * ``e < 0``              -> ``weight_bits - |e|``   (MSB planes only)
+    * ``e >= 0``             -> ``weight_bits``
+    """
+    sentinel = zero_sentinel(n_bits)
+    e = exp.astype(jnp.int32)
+    nb = jnp.clip(weight_bits + jnp.minimum(e, 0), 0, weight_bits)
+    return jnp.where(e == sentinel, 0, nb)
+
+
+class AccessReport(NamedTuple):
+    """All quantities are *per output-feature set of M weights per act*."""
+
+    element_bits: jnp.ndarray      # bits fetched, ASIC bank-granularity
+    tile_bits: jnp.ndarray         # bits fetched, TPU tile-granularity
+    baseline_bits: jnp.ndarray     # NaHiD: full 8b for every live act
+    savings_element: jnp.ndarray   # Fig. 3 number (live acts only)
+    savings_tile: jnp.ndarray
+    pruned_fraction: jnp.ndarray
+
+
+def weight_access_report(q: LogQuantized, n_bits: int = 4,
+                         weight_bits: int = WEIGHT_BITS,
+                         tile_k: int = 256) -> AccessReport:
+    """Traffic report for one layer's activation tensor ``q`` (flattened).
+
+    Baseline (NaHiD) fetches ``weight_bits`` for every *live* activation —
+    pruning is common to both designs, so the Fig. 3 savings ratio is
+    measured over live activations only.
+    """
+    exp = q.exp.reshape(-1)
+    sentinel = zero_sentinel(n_bits)
+    live = exp != sentinel
+
+    nb = needed_bits(exp, n_bits, weight_bits)
+    element_bits = jnp.sum(nb)
+    baseline_bits = jnp.sum(jnp.where(live, weight_bits, 0))
+
+    # --- tile granularity: pad to a tile multiple, reduce per tile ---------
+    k = exp.shape[0]
+    pad = (-k) % tile_k
+    nb_p = jnp.concatenate([nb, jnp.zeros((pad,), nb.dtype)])
+    live_p = jnp.concatenate([live, jnp.zeros((pad,), bool)])
+    tiles_nb = nb_p.reshape(-1, tile_k)
+    tiles_live = live_p.reshape(-1, tile_k)
+    planes_per_tile = jnp.max(tiles_nb, axis=1)          # planes DMA'd
+    live_any = jnp.any(tiles_live, axis=1)
+    tile_bits = jnp.sum(jnp.where(live_any, planes_per_tile, 0) * tile_k)
+    # a tile-granular baseline DMAs all 8 planes of every live tile — the
+    # apples-to-apples denominator for the kernel's skip savings.
+    tile_baseline = jnp.sum(jnp.where(live_any, weight_bits, 0) * tile_k)
+
+    denom = jnp.maximum(baseline_bits, 1)
+    tdenom = jnp.maximum(tile_baseline, 1)
+    return AccessReport(
+        element_bits=element_bits,
+        tile_bits=tile_bits,
+        baseline_bits=baseline_bits,
+        savings_element=1.0 - element_bits / denom,
+        savings_tile=1.0 - tile_bits / tdenom,
+        pruned_fraction=jnp.mean(1.0 - live.astype(jnp.float32)),
+    )

@@ -1,0 +1,90 @@
+"""Bit-plane weight storage — QeiHaN paper §IV-B (Fig. 7).
+
+The ASIC stores bit ``b`` of a group of weights in DRAM bank ``b`` so the
+vault controller can fetch only the MSB planes demanded by a negative
+activation exponent.  The TPU-native analogue implemented here:
+
+* :func:`to_bitplanes` — two's-complement decomposition of an int8 weight
+  tensor into 8 ``{0,1}`` planes, **plane-major** so each plane is a
+  contiguous HBM region (the "bank").
+* :func:`pack_planes` / :func:`unpack_planes` — pack each plane 8-to-a-byte
+  along the reduction axis, giving the same total footprint as the original
+  int8 tensor (8 planes x K/8 bytes) while keeping planes independently
+  addressable — this is the layout the Pallas kernel DMAs tile-by-tile.
+* :func:`from_bitplanes` — exact inverse (roundtrip-tested).
+
+Semantics note: with two's complement, ``floor(w / 2^k)`` (the arithmetic
+right shift the D&S unit performs for a negative exponent ``-k``) depends
+only on planes ``b >= k``.  Dropping the low ``k`` planes is therefore *not
+an approximation of the shift — it IS the shift*; this identity is what the
+whole paper rides on and is property-tested in ``tests/test_core_quant.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "to_bitplanes",
+    "from_bitplanes",
+    "pack_planes",
+    "unpack_planes",
+    "plane_coefficients",
+]
+
+WEIGHT_BITS = 8
+
+
+def to_bitplanes(q: jnp.ndarray, bits: int = WEIGHT_BITS) -> jnp.ndarray:
+    """int8 ``(...)`` -> uint8 ``(bits, ...)`` of {0,1}; plane b = bit b.
+
+    Two's complement: ``q = -2^(bits-1) * plane[bits-1] + sum_{b<bits-1} 2^b
+    * plane[b]``.
+    """
+    u = q.astype(jnp.uint8) if bits <= 8 else q.astype(jnp.uint32)
+    planes = [(u >> b) & 1 for b in range(bits)]
+    return jnp.stack(planes).astype(jnp.uint8)
+
+
+def plane_coefficients(bits: int = WEIGHT_BITS) -> jnp.ndarray:
+    """Signed weight of each plane: ``[1, 2, 4, ..., -2^(bits-1)]``."""
+    c = [1 << b for b in range(bits - 1)] + [-(1 << (bits - 1))]
+    return jnp.asarray(c, dtype=jnp.int32)
+
+
+def from_bitplanes(planes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`to_bitplanes` (returns int32 values)."""
+    bits = planes.shape[0]
+    coef = plane_coefficients(bits)
+    coef = coef.reshape((bits,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * coef, axis=0)
+
+
+def pack_planes(planes: jnp.ndarray, axis: int = 1) -> jnp.ndarray:
+    """Pack a ``(bits, ..., K, ...)`` plane tensor 8x along ``axis``.
+
+    ``axis`` is the index *within a single plane* (i.e. excluding the leading
+    plane axis) of the dimension to pack; it must be divisible by 8.
+    Bit ``j`` of packed byte ``g`` holds element ``8*g + j``.
+    """
+    axis = axis % (planes.ndim - 1)
+    full_axis = axis + 1
+    k = planes.shape[full_axis]
+    if k % 8:
+        raise ValueError(f"pack axis length {k} not divisible by 8")
+    moved = jnp.moveaxis(planes, full_axis, -1)
+    grouped = moved.reshape(moved.shape[:-1] + (k // 8, 8))
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    packed = jnp.sum(grouped.astype(jnp.uint8) * weights, axis=-1,
+                     dtype=jnp.uint8)
+    return jnp.moveaxis(packed, -1, full_axis)
+
+
+def unpack_planes(packed: jnp.ndarray, axis: int = 1) -> jnp.ndarray:
+    """Inverse of :func:`pack_planes`."""
+    axis = axis % (packed.ndim - 1)
+    full_axis = axis + 1
+    moved = jnp.moveaxis(packed, full_axis, -1)
+    bits = (moved[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    flat = bits.reshape(moved.shape[:-1] + (moved.shape[-1] * 8,))
+    return jnp.moveaxis(flat, -1, full_axis).astype(jnp.uint8)

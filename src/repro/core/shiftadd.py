@@ -1,0 +1,180 @@
+"""The QeiHaN shift-add dot product — paper Eq. 5 — in three equal forms.
+
+Semantics.  An activation quantizes to ``s * 2^e`` (``core.logquant``), a
+weight to int8 ``w`` (``core.wquant``).  The D&S unit produces
+
+* ``e >= 0``: ``w << e``  (exact product),
+* ``e < 0``:  ``w >> |e|`` arithmetic  ==  ``floor(w / 2^|e|)``  — the LSBs
+  of ``w`` shift out of the 16-bit datapath and are **never fetched** from
+  memory.  This floor-truncation is the accuracy cost of the paper's memory
+  saving, and we model it exactly.
+
+Forms (all return the same int32 tensor, property-tested):
+
+1. :func:`shift_product` / :func:`shiftadd_matmul_elementwise` — direct
+   per-element oracle, O(K*N) temporaries; the specification.
+2. :func:`shiftadd_matmul_bitplane` — the MXU-friendly regrouping used by
+   the Pallas kernel: ``y = sum_b sgn_b * (a_b @ plane_b)`` with
+   ``a_b[i] = s_i * 2^(b + e_i) * [b + e_i >= 0]`` (int32) and ``plane_b``
+   the ``{0,1}`` bit-plane.  Plane ``b`` contributes nothing for activations
+   with ``e_i < -b`` — the *compute* image of the paper's skipped fetches.
+3. :func:`shiftadd_matmul_exact` — un-truncated ``sum s_i w_i 2^{e_i}``
+   (what the NaHiD/full-fetch datapath computes, and the float reference for
+   accuracy ablations).
+
+`QuantizedLinear` wraps the whole path (calibrated activation pre-scale ->
+LOG2 quant -> bit-plane matmul -> dequant) as the drop-in projection layer
+used by the model zoo when ``QuantConfig.mode == "qeihan"``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane as bp
+from repro.core.logquant import (LogQuantized, log2_dequantize, log2_quantize,
+                                 zero_sentinel)
+from repro.core.wquant import QuantizedWeights, quantize_weights
+
+__all__ = [
+    "shift_product",
+    "shiftadd_matmul_elementwise",
+    "shiftadd_matmul_bitplane",
+    "shiftadd_matmul_exact",
+    "QuantizedLinearParams",
+    "quantized_linear_init",
+    "quantized_linear_apply",
+    "calibrate_act_scale",
+]
+
+
+def shift_product(w: jnp.ndarray, q: LogQuantized, n_bits: int = 4) -> jnp.ndarray:
+    """``sign * Bitshift(w, e)`` with arithmetic right shift; sentinel -> 0."""
+    sentinel = zero_sentinel(n_bits)
+    w32 = w.astype(jnp.int32)
+    e = q.exp.astype(jnp.int32)
+    left = w32 << jnp.maximum(e, 0)
+    right = w32 >> jnp.maximum(-e, 0)        # arithmetic shift == floor div
+    shifted = jnp.where(e >= 0, left, right)
+    shifted = jnp.where(e == sentinel, 0, shifted)
+    return q.sign.astype(jnp.int32) * shifted
+
+
+def shiftadd_matmul_elementwise(q: LogQuantized, w: jnp.ndarray,
+                                n_bits: int = 4) -> jnp.ndarray:
+    """Oracle: ``y[..., n] = sum_k s_k * Bitshift(w[k, n], e_k)``.
+
+    ``q.exp/q.sign``: ``(..., K)``;  ``w``: int8 ``(K, N)``.  O(K*N)
+    temporaries — use only for validation / small layers.
+    """
+    prod = shift_product(w.astype(jnp.int32)[None], LogQuantized(
+        exp=q.exp[..., None], sign=q.sign[..., None]), n_bits)
+    return jnp.sum(prod, axis=-2)
+
+
+def shiftadd_matmul_bitplane(q: LogQuantized, planes: jnp.ndarray,
+                             n_bits: int = 4,
+                             plane_dtype: jnp.dtype = jnp.int32) -> jnp.ndarray:
+    """Bit-plane regrouping: 8 {0,1}-matmuls on the MXU.  Exact (int32).
+
+    ``planes``: uint8 ``(bits, K, N)`` from :func:`bitplane.to_bitplanes`.
+    Derivation: for ``e < 0``, ``floor(w/2^|e|) = sum_{b >= |e|} c_b 2^e
+    plane_b(w)`` with ``c_b = 2^b`` (``-2^7`` for the sign plane), because
+    two's-complement floor-shift simply discards low planes.  Folding
+    ``c_b * 2^e = sgn_b * 2^(b+e)`` into the activation keeps everything
+    integer: ``a_b[k] = s_k * 2^(b+e_k)`` when ``b + e_k >= 0`` else 0.
+    """
+    bits = planes.shape[0]
+    sentinel = zero_sentinel(n_bits)
+    e = q.exp.astype(jnp.int32)
+    s = q.sign.astype(jnp.int32)
+    alive = (e != sentinel)
+
+    out = None
+    for b in range(bits):
+        sh = b + e
+        contrib = alive & (sh >= 0)
+        a_b = jnp.where(contrib, s << jnp.maximum(sh, 0), 0)
+        term = jnp.matmul(a_b.astype(plane_dtype),
+                          planes[b].astype(plane_dtype),
+                          preferred_element_type=jnp.int32)
+        if b == bits - 1:
+            term = -term                      # two's-complement sign plane
+        out = term if out is None else out + term
+    return out
+
+
+def shiftadd_matmul_exact(q: LogQuantized, w: jnp.ndarray,
+                          n_bits: int = 4) -> jnp.ndarray:
+    """Un-truncated ``sum_k s_k w_k 2^{e_k}`` (float32) — NaHiD datapath."""
+    a = log2_dequantize(q, n_bits, dtype=jnp.float32)
+    return jnp.matmul(a, w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Framework-facing quantized projection layer
+# ---------------------------------------------------------------------------
+
+class QuantizedLinearParams(NamedTuple):
+    planes: jnp.ndarray       # uint8 (8, K, N) bit-planes of the int8 weight
+    w_scale: jnp.ndarray      # f32 per-output-channel scale (1, N)
+    act_scale: jnp.ndarray    # f32 scalar pre-scale so acts fit [2^-7, 2^7]
+    bias: Optional[jnp.ndarray]
+
+
+def calibrate_act_scale(x: jnp.ndarray, percentile: float = 99.9) -> jnp.ndarray:
+    """Per-tensor activation scale: map the p99.9 magnitude to ~2^3.
+
+    LOG2 codes cover [2^-7, 2^7]; centering the distribution's tail at 2^3
+    leaves 4 octaves of headroom and 10 octaves below — matching the paper's
+    observation that post-norm activations concentrate in (-1, 1).
+    """
+    mag = jnp.percentile(jnp.abs(x.astype(jnp.float32)), percentile)
+    return jnp.maximum(mag, 1e-12) / 8.0
+
+
+def quantized_linear_init(w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+                          act_scale: float | jnp.ndarray = 1.0,
+                          bits: int = 8) -> QuantizedLinearParams:
+    """Offline weight pre-arrangement (paper: 'weights are known statically
+    so their organization can be pre-arranged offline')."""
+    qw: QuantizedWeights = quantize_weights(w, bits=bits, channel_axis=-1)
+    planes = bp.to_bitplanes(qw.q, bits=bits)
+    return QuantizedLinearParams(
+        planes=planes,
+        w_scale=qw.scale.reshape(1, -1),
+        act_scale=jnp.asarray(act_scale, jnp.float32),
+        bias=bias,
+    )
+
+
+def quantized_linear_apply(p: QuantizedLinearParams, x: jnp.ndarray,
+                           n_bits: int = 4,
+                           truncated: bool = True) -> jnp.ndarray:
+    """x (..., K) -> y (..., N) through the full QeiHaN path.
+
+    ``p.planes`` may be packed 8-to-a-byte along K (the HBM-resident deploy
+    format: same footprint as plain INT8); unpacking happens on the fly —
+    in-register on the TPU kernel, an explicit op here.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    planes = p.planes
+    if planes.shape[1] * 8 == k:                  # packed along K
+        planes = bp.unpack_planes(planes, axis=0)
+    xs = (x.astype(jnp.float32) / p.act_scale).reshape(-1, k)
+    q = log2_quantize(xs, n_bits=n_bits)
+    if truncated:
+        y_int = shiftadd_matmul_bitplane(q, planes, n_bits=n_bits)
+        y = y_int.astype(jnp.float32)
+    else:
+        w = bp.from_bitplanes(planes).astype(jnp.float32)
+        y = shiftadd_matmul_exact(q, w, n_bits=n_bits)
+    y = y * p.w_scale * p.act_scale
+    y = y.reshape(*lead, -1)
+    if p.bias is not None:
+        y = y + p.bias
+    return y

@@ -1,0 +1,52 @@
+"""INT8 uniform weight quantization — QeiHaN paper Eq. 1.
+
+The paper quantizes weights with linear uniform quantization
+``Q(r) = INT(r/s) - z``.  QeiHaN's shift-add datapath operates on
+two's-complement integers, which requires a **symmetric** grid (``z = 0``);
+we therefore use symmetric per-channel (or per-tensor) quantization, the
+standard choice for weight-stationary integer GEMMs.  The asymmetric offset
+in Eq. 1 is only exercised by the paper for activations in the Neurocube
+baseline, which we model in ``simulator/``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+__all__ = ["QuantizedWeights", "quantize_weights", "dequantize_weights"]
+
+
+class QuantizedWeights(NamedTuple):
+    """Symmetric integer weights: ``w ~= q * scale``."""
+
+    q: jnp.ndarray      # int8 (or int32 for >8-bit grids)
+    scale: jnp.ndarray  # f32, broadcastable against q
+    bits: int
+
+
+def quantize_weights(w: jnp.ndarray, bits: int = 8,
+                     channel_axis: Optional[int] = None) -> QuantizedWeights:
+    """Symmetric uniform quantization to ``bits`` (default INT8).
+
+    ``channel_axis`` selects per-channel scales (typically the output-feature
+    axis of a ``(K, N)`` weight); ``None`` gives a per-tensor scale.
+    The integer grid is ``[-(2^(b-1)-1), 2^(b-1)-1]`` (no -128, so the
+    bit-plane decomposition and arithmetic shifts are symmetric in range).
+    """
+    w = w.astype(jnp.float32)
+    qmax = (1 << (bits - 1)) - 1
+    if channel_axis is None:
+        absmax = jnp.max(jnp.abs(w))
+    else:
+        axes = tuple(a for a in range(w.ndim) if a != channel_axis % w.ndim)
+        absmax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return QuantizedWeights(q=q.astype(dtype), scale=scale, bits=bits)
+
+
+def dequantize_weights(qw: QuantizedWeights) -> jnp.ndarray:
+    return qw.q.astype(jnp.float32) * qw.scale

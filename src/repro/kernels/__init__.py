@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the QeiHaN hot paths.
+
+Each kernel directory carries:
+  kernel.py — ``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling
+  ops.py    — jit'd public wrapper (padding, scalar-prefetch tables)
+  ref.py    — pure-jnp oracle the kernel is exact/allclose-tested against
+
+Kernels target TPU v5e; on this CPU container they are validated with
+``interpret=True`` (the wrappers auto-select based on backend).
+"""
+
+from repro.kernels.log2quant.ops import log2_quantize_pallas
+from repro.kernels.bitplane_matmul.ops import bitplane_matmul_pallas
+
+__all__ = ["log2_quantize_pallas", "bitplane_matmul_pallas"]

@@ -1,0 +1,80 @@
+"""Public jit'd wrapper for the bit-plane matmul Pallas kernel.
+
+Responsibilities: pad (M, K, N) to block multiples, build the scalar-prefetch
+``min_plane`` skip table from the activation exponents, invoke the kernel,
+unpad.  Also exposes :func:`plane_traffic_fraction`, the HBM-traffic image of
+the skip table used by benchmarks (granularity-matched to the kernel tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitplane_matmul.kernel import (WEIGHT_BITS,
+                                                  bitplane_matmul_kernel)
+
+
+def _skip_table(exp: jnp.ndarray, block_m: int, block_k: int,
+                n_bits: int, bits: int) -> jnp.ndarray:
+    """min_plane[mi, ki] = max(0, -max_exp_tile); 'bits' if tile fully pruned."""
+    sentinel = -(1 << (n_bits - 1))
+    m, k = exp.shape
+    e = exp.astype(jnp.int32).reshape(m // block_m, block_m,
+                                      k // block_k, block_k)
+    e = jnp.swapaxes(e, 1, 2)                        # (Mb, Kb, bm, bk)
+    alive = e != sentinel
+    neg_inf = jnp.int32(-128)
+    max_e = jnp.max(jnp.where(alive, e, neg_inf), axis=(2, 3))
+    min_plane = jnp.clip(-max_e, 0, bits)
+    return jnp.where(jnp.any(alive, axis=(2, 3)), min_plane, bits).astype(
+        jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def bitplane_matmul_pallas(exp: jnp.ndarray, sign: jnp.ndarray,
+                           planes: jnp.ndarray, n_bits: int = 4,
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 128,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """exp/sign int8 (M, K), planes uint8 (8, K, N) -> int32 (M, N)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = exp.shape
+    bits, _, n = planes.shape
+
+    bm = min(block_m, m) if m % block_m == 0 else block_m
+    pm, pk, pn = (-m) % block_m, (-k) % block_k, (-n) % block_n
+    sentinel = -(1 << (n_bits - 1))
+    # pad activations with the sentinel (contributes nothing), weights with 0.
+    exp_p = jnp.pad(exp, ((0, pm), (0, pk)), constant_values=sentinel)
+    sign_p = jnp.pad(sign, ((0, pm), (0, pk)), constant_values=1)
+    planes_p = jnp.pad(planes, ((0, 0), (0, pk), (0, pn)))
+
+    table = _skip_table(exp_p, block_m, block_k, n_bits, bits)
+    out = bitplane_matmul_kernel(exp_p, sign_p, planes_p, table,
+                                 n_bits=n_bits, block_m=block_m,
+                                 block_n=block_n, block_k=block_k,
+                                 interpret=interpret)
+    return out[:m, :n]
+
+
+def plane_traffic_fraction(exp: jnp.ndarray, n_bits: int = 4,
+                           block_m: int = 128, block_k: int = 128,
+                           bits: int = WEIGHT_BITS) -> jnp.ndarray:
+    """Fraction of weight-plane tiles the kernel actually touches (0..1).
+
+    The denominator is all ``bits`` planes of every (m-tile, k-tile) cell —
+    i.e. what a standard int8 layout streams.  Mirrors the kernel's skip rule
+    exactly (same table).
+    """
+    m, k = exp.shape
+    pm, pk = (-m) % block_m, (-k) % block_k
+    sentinel = -(1 << (n_bits - 1))
+    exp_p = jnp.pad(exp, ((0, pm), (0, pk)), constant_values=sentinel)
+    table = _skip_table(exp_p, block_m, block_k, n_bits, bits)
+    fetched = jnp.sum(bits - table)
+    return fetched / (bits * table.size)

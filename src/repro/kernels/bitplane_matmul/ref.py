@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the bit-plane matmul: direct per-element shifts.
+
+Deliberately the most literal transcription of paper Eq. 5 + the D&S unit's
+arithmetic-shift semantics — no bit-plane regrouping, no tiling — so the
+kernel and oracle share neither algorithm nor layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bitplane_matmul_ref(exp: jnp.ndarray, sign: jnp.ndarray,
+                        w_int8: jnp.ndarray, n_bits: int = 4) -> jnp.ndarray:
+    """exp/sign: (M, K) int8; w_int8: (K, N) int8 -> (M, N) int32."""
+    sentinel = -(1 << (n_bits - 1))
+    e = exp.astype(jnp.int32)[:, :, None]           # (M, K, 1)
+    s = sign.astype(jnp.int32)[:, :, None]
+    w = w_int8.astype(jnp.int32)[None, :, :]        # (1, K, N)
+    left = w << jnp.maximum(e, 0)
+    right = w >> jnp.maximum(-e, 0)                 # arithmetic: floor(w/2^|e|)
+    prod = jnp.where(e >= 0, left, right)
+    prod = jnp.where(e == sentinel, 0, prod)
+    return jnp.sum(s * prod, axis=1)

@@ -1,0 +1,45 @@
+"""Public jit'd wrapper for the log2quant Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.log2quant.kernel import log2_quantize_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "block_m", "block_n",
+                                             "interpret"))
+def log2_quantize_pallas(x: jnp.ndarray, n_bits: int = 4,
+                         block_m: int = 256, block_n: int = 512,
+                         interpret: bool | None = None):
+    """LOG2-quantize an arbitrary-rank tensor via the Pallas kernel.
+
+    Flattens to 2D, pads to block multiples, unpads/reshapes the outputs.
+    Returns ``(exp int8, sign int8)`` with the same shape as ``x``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    total = 1
+    for s in shape:
+        total *= s
+    n = min(block_n, max(128, total))
+    # choose an (M, N) factorization: lanes = block_n when possible
+    n = block_n if total >= block_n else total
+    m = -(-total // n)
+    pad = m * n - total
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad)).reshape(m, n)
+
+    pm = (-m) % block_m
+    pn = (-n) % block_n
+    flat = jnp.pad(flat, ((0, pm), (0, pn)))
+    exp, sign = log2_quantize_kernel(flat, n_bits=n_bits,
+                                     block_m=min(block_m, flat.shape[0]),
+                                     block_n=min(block_n, flat.shape[1]),
+                                     interpret=interpret)
+    exp = exp[:m, :n].reshape(-1)[:total].reshape(shape)
+    sign = sign[:m, :n].reshape(-1)[:total].reshape(shape)
+    return exp, sign

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the log2quant kernel (independent of core.logquant).
+
+Uses ``jnp.frexp`` — mathematically exact mantissa/exponent split — rather
+than bit extraction, so the kernel and oracle share no code path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def log2_quantize_ref(x: jnp.ndarray, n_bits: int = 4):
+    sentinel = -(1 << (n_bits - 1))
+    emax = (1 << (n_bits - 1)) - 1
+
+    xf = x.astype(jnp.float32)
+    mant, expo = jnp.frexp(jnp.abs(xf))           # |x| = mant * 2^expo, mant in [0.5, 1)
+    # Round(log2|x|) = (expo - 1) + (2*mant >= sqrt(2)); mantissa in [1,2) is 2*mant.
+    # float32(sqrt(2)) rounds BELOW the true sqrt(2), and no float32 mantissa
+    # lies between them, so the exact predicate "m >= sqrt(2)" over float32
+    # inputs is the *strict* compare against the rounded constant.
+    half_sqrt2 = np.float32(np.sqrt(np.float64(2.0)) / 2.0)
+    rounded = (expo - 1) + (mant > half_sqrt2).astype(jnp.int32)
+
+    e = jnp.clip(rounded, sentinel, emax)
+    e = jnp.where((xf == 0) | jnp.isnan(xf), sentinel, e)
+    e = jnp.where(jnp.isinf(xf), emax, e)
+    sign = jnp.where(xf < 0, jnp.int8(-1), jnp.int8(1))
+    return e.astype(jnp.int8), sign

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and extract memory/cost/collective analyses (EXPERIMENTS.md §Dry-run).
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --multi-pod
+Outputs one JSON per cell under --out (default results/dryrun).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALIASES, get_config, get_smoke, list_archs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch import policy
+from repro.launch.shapes import SHAPES, input_specs, shape_applicable
+from repro.launch.shardings import (batch_shardings, cache_shardings,
+                                    opt_shardings, params_shardings)
+from repro.models.model import init_params, param_count
+from repro.models.sharding import mesh_axes
+from repro.optim import adamw
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.train.trainer import TrainConfig, make_train_step
+
+
+def _param_specs(cfg):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in dir(ma):
+        if k.startswith("_"):
+            continue
+        v = getattr(ma, k)
+        if isinstance(v, (int, float)):
+            out[k] = v
+    return out
+
+
+def _cost_analysis_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and len(k) < 40}
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             smoke: bool = False, remat: str = None,
+             layout: str = None, save_hlo: str = None,
+             quant: bool = False, cache_dtype: str = None) -> dict:
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if cache_dtype:
+        cfg = cfg.replace(cache_dtype={
+            "f8": jnp.float8_e4m3fn, "bf16": jnp.bfloat16,
+            "int8": jnp.int8}[cache_dtype])
+    sp = SHAPES[shape]
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(DESIGN.md §Skips)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pol = policy.for_cell(cfg, sp.step, mesh, override=layout,
+                          global_batch=sp.global_batch)
+    specs = input_specs(cfg, shape)
+    rep = NamedSharding(mesh, P())
+    long_ctx = shape == "long_500k"
+
+    t0 = time.perf_counter()
+    with mesh:
+        if quant and sp.step != "train":
+            # QeiHaN deployment: packed bit-plane weights resident, float
+            # projections dropped (paper technique as the serving format)
+            from repro.models.quantize import quantize_model_params
+            pspecs = jax.eval_shape(
+                lambda: quantize_model_params(
+                    cfg, init_params(jax.random.PRNGKey(0), cfg),
+                    drop_float=True, pack=True))
+        else:
+            pspecs = _param_specs(cfg)
+        psh = params_shardings(mesh, pspecs, fsdp=pol.fsdp,
+                               model_axis=pol.model_axis,
+                               fsdp_axes=pol.fsdp_axes,
+                               tp_scope=pol.tp_scope, ep_axis=pol.ep_axis)
+        if sp.step == "train":
+            ospecs = jax.eval_shape(adamw.init, pspecs)
+            osh = opt_shardings(mesh, ospecs, psh,
+                                extra_axes=tuple(a for a in mesh.axis_names
+                                                 if a != pol.ep_axis))
+            bsh = batch_shardings(mesh, specs["batch"], axes=pol.batch_axes)
+            step = make_train_step(cfg, TrainConfig())
+            msh = {"loss": rep, "grad_norm": rep, "lr": rep}
+            jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                             out_shardings=(psh, osh, msh),
+                             donate_argnums=(0, 1))
+            args = (pspecs, ospecs, specs["batch"])
+        else:
+            csh = cache_shardings(mesh, specs["caches"],
+                                  batch=sp.global_batch,
+                                  long_context=long_ctx,
+                                  axes=pol.batch_axes,
+                                  model_axis=pol.model_axis)
+            if sp.step == "prefill":
+                bsh = batch_shardings(mesh, specs["batch"],
+                                      axes=pol.batch_axes)
+                step = make_prefill_step(cfg, quant=quant)
+                jitted = jax.jit(step, in_shardings=(psh, bsh, csh),
+                                 donate_argnums=(2,))
+                args = (pspecs, specs["batch"], specs["caches"])
+            else:
+                tsh = batch_shardings(mesh, specs["token"],
+                                      axes=pol.batch_axes)
+                step = make_serve_step(cfg, quant=quant)
+                jitted = jax.jit(step, in_shardings=(psh, csh, tsh),
+                                 donate_argnums=(1,))
+                args = (pspecs, specs["caches"], specs["token"])
+
+        with mesh_axes(batch=pol.batch_axes, model=pol.model_axis,
+                       seq_shard=pol.seq_shard and sp.step != "serve",
+                       cache_seq_axis="data" if long_ctx else None,
+                       sizes=dict(mesh.shape), mesh=mesh,
+                       ep_axis=pol.ep_axis):
+            lowered = jitted.lower(*args)
+        lower_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t1
+
+    mem = _memory_analysis_dict(compiled)
+    cost = _cost_analysis_dict(compiled)
+    hlo_text = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo_text)
+    hlo = analyze_hlo(hlo_text)
+    pc = param_count(cfg)
+    tokens = sp.global_batch * (sp.seq_len if sp.step != "serve" else 1)
+
+    result = {
+        "arch": arch, "shape": shape, "step": sp.step,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "chips": int(mesh.size), "smoke": smoke,
+        "seq_len": sp.seq_len, "global_batch": sp.global_batch,
+        "tokens_per_step": tokens,
+        "params_total": pc["total"], "params_active": pc["active"],
+        "lower_s": round(lower_s, 2), "compile_s": round(compile_s, 2),
+        "memory_analysis": mem, "cost_analysis": cost, "hlo": hlo,
+        "options": {"remat": cfg.remat, "layout": pol.describe(),
+                    "quant": quant},
+    }
+    print(f"[dryrun] {arch} x {shape} mesh={result['mesh']} "
+          f"lower={lower_s:.1f}s compile={compile_s:.1f}s "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"flops/chip={hlo['flops']:.3e} "
+          f"coll/chip={hlo['collective_bytes_total']/2**20:.1f}MiB")
+    print("memory_analysis:", json.dumps(mem))          # proves it fits
+    print("cost_analysis:", json.dumps(cost))           # FLOPs/bytes source
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--layout", default=None,
+                    choices=[None, "fsdp", "ep", "tp"])
+    ap.add_argument("--quant", action="store_true",
+                    help="serve with QeiHaN packed bit-plane weights")
+    ap.add_argument("--cache-dtype", default=None,
+                    choices=[None, "f8", "bf16", "int8"],
+                    help="KV-cache storage dtype (beyond-paper: LOG2-style "
+                         "quantization applied to the cache)")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            mesh_tag = "pod2" if args.multi_pod else "pod1"
+            name = ALIASES.get(arch, arch).replace("-", "_")
+            out_path = os.path.join(
+                args.out, f"{name}__{shape}__{mesh_tag}{args.tag}.json")
+            try:
+                res = run_cell(arch, shape, multi_pod=args.multi_pod,
+                               smoke=args.smoke, remat=args.remat,
+                               layout=args.layout,
+                               save_hlo=args.save_hlo, quant=args.quant,
+                               cache_dtype=args.cache_dtype)
+            except Exception as e:                      # noqa: BLE001
+                traceback.print_exc()
+                res = {"arch": arch, "shape": shape, "error": str(e)}
+                failures += 1
+            with open(out_path, "w") as f:
+                json.dump(res, f, indent=1)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds, per chip, per step):
+  compute    = HLO_FLOPs / 197e12
+  memory     = HLO_bytes / 819e9
+  collective = collective_bytes / 50e9
+
+HLO_FLOPs / HLO_bytes / collective_bytes are per-chip values from the
+loop-aware analyzer (launch.hlo_analysis) over the SPMD-partitioned module;
+the global value is chips x per-chip, so these terms equal the assignment's
+``global / (chips * peak)`` formulation.
+
+MODEL_FLOPS = 6*N*D (train; dense N or active N for MoE) or 2*N*D
+(inference) — the "useful math" floor.  ``useful_fraction`` =
+MODEL_FLOPS-ideal-time / max(term): how close the step is to running the
+useful math at the roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs * chips)
+    useful_fraction: float       # model-ideal-time / bound
+    bound_s: float
+    collective_breakdown: Dict[str, float]
+    note: str = ""
+
+    @property
+    def key(self):
+        return (self.arch, self.shape, self.mesh)
+
+
+def analyze_cell(res: dict) -> Optional[RooflineRow]:
+    if res.get("skipped") or res.get("error"):
+        return None
+    hlo = res["hlo"]
+    chips = res["chips"]
+    compute_s = hlo["flops"] / PEAK_FLOPS
+    memory_s = hlo["traffic_bytes"] / HBM_BW
+    collective_s = hlo["collective_bytes_total"] / ICI_BW
+
+    n = res["params_active"]
+    d = res["tokens_per_step"]
+    model_flops = (6.0 if res["step"] == "train" else 2.0) * n * d
+    hlo_global = hlo["flops"] * chips
+    bound = max(compute_s, memory_s, collective_s)
+    ideal = model_flops / chips / PEAK_FLOPS
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return RooflineRow(
+        arch=res["arch"], shape=res["shape"],
+        mesh="x".join(map(str, res["mesh"])), chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, hlo_flops=hlo_global,
+        useful_ratio=model_flops / max(hlo_global, 1.0),
+        useful_fraction=ideal / max(bound, 1e-30), bound_s=bound,
+        collective_breakdown={k: v / ICI_BW
+                              for k, v in hlo["collective_bytes"].items()},
+    )
+
+
+def load_rows(directory: str) -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            res = json.load(f)
+        row = analyze_cell(res)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':<20} {'shape':<12} {'mesh':<9} "
+           f"{'compute_s':>10} {'memory_s':>10} {'collect_s':>10} "
+           f"{'bound':<10} {'useful':>7} {'frac':>6}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:<20} {r.shape:<12} {r.mesh:<9} "
+            f"{r.compute_s:>10.4f} {r.memory_s:>10.4f} {r.collective_s:>10.4f} "
+            f"{r.dominant:<10} {r.useful_ratio:>7.3f} {r.useful_fraction:>6.3f}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

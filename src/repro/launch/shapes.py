@@ -1,0 +1,90 @@
+"""Assigned input shapes and ShapeDtypeStruct builders per (arch x shape).
+
+Shapes (assignment):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill_step
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288, global_batch 1     -> serve_step; SSM/hybrid only
+
+``input_specs()`` returns weak-type-correct ShapeDtypeStructs only — no
+device allocation; the dry-run lowers against them directly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, init_caches
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                   # train | prefill | serve
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "serve"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "serve"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k only for sub-quadratic archs (DESIGN.md §Skips)."""
+    if shape == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, sp: ShapeSpec, *,
+                with_labels: bool) -> Dict[str, Any]:
+    b, s = sp.global_batch, sp.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio_stub":
+        out["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        if with_labels:
+            out["labels"] = _sds((b, s), jnp.int32)
+        return out
+    s_text = s - cfg.n_image_tokens if cfg.frontend == "vision_stub" else s
+    out["tokens"] = _sds((b, s_text), jnp.int32)
+    if cfg.frontend == "vision_stub":
+        out["image_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    if with_labels:
+        out["labels"] = _sds((b, s_text), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+
+def token_specs(cfg: ModelConfig, batch: int) -> Any:
+    if cfg.frontend == "audio_stub":
+        return _sds((batch, 1, cfg.d_model), jnp.bfloat16)
+    return _sds((batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """All step inputs (excluding params/opt) for the given shape."""
+    sp = SHAPES[shape]
+    if sp.step == "train":
+        return {"batch": batch_specs(cfg, sp, with_labels=True)}
+    if sp.step == "prefill":
+        return {"batch": batch_specs(cfg, sp, with_labels=False),
+                "caches": cache_specs(cfg, sp.global_batch, sp.seq_len)}
+    # serve: one token against a cache holding seq_len tokens
+    return {"caches": cache_specs(cfg, sp.global_batch, sp.seq_len),
+            "token": token_specs(cfg, sp.global_batch)}

@@ -1,0 +1,221 @@
+"""Parameter/cache/batch partition rules with divisibility fallback.
+
+TP rule per leaf (by pytree path name), FSDP rule on top (largest remaining
+dim sharded on the data axis for leaves above a size threshold), and every
+rule checks divisibility against the mesh — non-divisible dims stay
+replicated (e.g. smollm's 9 heads under 16-way TP).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> index of the dim to shard on the model axis (negative = from
+# the right; None = replicate).  Stacked layer leaves carry a leading repeat
+# dim, hence counting from the right.
+_TP_RULES = [
+    # QeiHaN bit-plane weights (R, 8, K[, /8], N): same relative dims as
+    # their float counterparts (packing only shrinks K)
+    (r"\['(wq_q|wk_q|wv_q|gate_q|up_q|in_proj_q)'\]\.planes$", -1),
+    (r"\['(wo_q|down_q|out_proj_q)'\]\.planes$", -2),
+    (r"\.(w_scale|act_scale)$", None),
+    (r"\['embed'\]$", 0),              # (V, d): vocab
+    (r"\['lm_head'\]$", -1),           # (d, V): vocab
+    (r"\['img_proj'\]$", -1),
+    (r"\['(wq|wk|wv)'\]$", -1),        # (R, d, H*hd): heads
+    (r"\['(bq|bk|bv)'\]$", -1),
+    (r"\['wo'\]$", -2),                # (R, H*hd, d): input/head dim
+    (r"\['experts'\]\['(gate|up|down)'\]$", -3),   # (R, E, ..): experts (EP)
+    (r"\['(gate|up)'\]$", -1),         # (R, d, ff): ff
+    (r"\['down'\]$", -2),              # (R, ff, d): ff
+    (r"\['router'\]$", None),
+    (r"\['in_proj'\]$", -1),           # (R, d, Z): inner (legacy fused)
+    (r"\['(wz|wx)'\]$", -1),           # (R, d, d_inner)
+    (r"\['(wb|wc|wdt)'\]$", None),     # small B/C/dt heads: replicate
+    (r"\['out_proj'\]$", -2),          # (R, d_inner, d)
+    (r"\['conv_w(x)?'\]$", -1),
+    (r"\['conv_b(x)?'\]$", -1),
+    (r"\['conv_[wb][bc]'\]$", None),
+    (r"\['(dt_bias|a_log|d_skip)'\]$", -1),
+    (r"\['norm'\]$", -1),              # (R, d_inner): gated-norm weight
+    (r"\['(ln1|ln2|q_norm|k_norm|final_norm)'\]$", None),
+]
+
+
+def _axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return mesh.shape[axis]
+
+
+def _tp_dim(path: str, ndim: int) -> Optional[int]:
+    if ndim == 0:                       # scalar placeholder (dropped weight)
+        return None
+    for pat, dim in _TP_RULES:
+        if re.search(pat, path):
+            if dim is None:
+                return None
+            return dim % ndim
+    return None
+
+
+_EXPERT_RE = re.compile(r"\['experts'\]\['(gate|up|down)'\]$")
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh, *,
+               model_axis: Optional[str] = "model",
+               fsdp_axes: tuple = (),
+               fsdp_threshold: int = 1 << 20,
+               tp_scope: str = "all") -> P:
+    ndim = len(shape)
+    entries: list = [None] * ndim
+    is_expert = bool(_EXPERT_RE.search(path))
+    use_tp = model_axis is not None and (tp_scope == "all" or is_expert)
+    msize = _axis_size(mesh, model_axis) if use_tp else 1
+    if use_tp and msize > 1:
+        tp = _tp_dim(path, ndim)
+        if tp is not None and shape[tp] % msize == 0:
+            entries[tp] = model_axis
+    # FSDP: shard the largest remaining divisible dim on the given axes.
+    # Expert weights under EP stay resident (shard_map owns them 1:1).
+    if fsdp_axes and not (is_expert and tp_scope == "experts") \
+            and int(np.prod(shape)) >= fsdp_threshold:
+        fsize = int(np.prod([_axis_size(mesh, a) for a in fsdp_axes]))
+        cands = sorted(range(ndim), key=lambda d: -shape[d])
+        for d in cands:
+            if entries[d] is None and shape[d] % fsize == 0:
+                entries[d] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+    return P(*entries)
+
+
+def params_shardings(mesh: Mesh, params_tree: Any, *, fsdp: bool = True,
+                     model_axis: Optional[str] = "model",
+                     fsdp_axes: Optional[tuple] = None,
+                     fsdp_threshold: int = 1 << 20,
+                     tp_scope: str = "all",
+                     ep_axis: Optional[str] = None) -> Any:
+    from repro.launch.mesh import batch_axes
+    if fsdp_axes is None:
+        fax = batch_axes(mesh) if fsdp else ()
+    else:
+        fax = fsdp_axes if fsdp else ()
+    # under EP-only scope, experts bind the EP axis
+    eff_model = model_axis if model_axis is not None else ep_axis
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(jax.tree_util.keystr(path), leaf.shape, mesh,
+                          model_axis=eff_model,
+                          fsdp_axes=fax, fsdp_threshold=fsdp_threshold,
+                          tp_scope=tp_scope)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(mesh: Mesh, opt_tree: Any, param_shardings_tree: Any,
+                  extra_axes: tuple = ()) -> Any:
+    """Moments follow their parameters; scalars replicate.
+
+    ``extra_axes``: additionally shard each moment's largest free dim on
+    these axes — f32 m/v are the optimizer-memory hog, and since the update
+    is elementwise any sharding is valid (EP expert weights keep their
+    weights resident but spread their moments)."""
+    rep = NamedSharding(mesh, P())
+
+    def widen(sh, leaf):
+        if not extra_axes:
+            return sh
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        used = set()
+        for e in spec:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a:
+                    used.add(a)
+        free = tuple(a for a in extra_axes if a not in used)
+        if not free:
+            return sh
+        fsize = int(np.prod([_axis_size(mesh, a) for a in free]))
+        for d in sorted(range(len(leaf.shape)), key=lambda i: -leaf.shape[i]):
+            if spec[d] is None and leaf.shape[d] % fsize == 0:
+                spec[d] = free if len(free) > 1 else free[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    m_sh = jax.tree.map(widen, param_shardings_tree, opt_tree["m"])
+    return {
+        "m": m_sh,
+        "v": jax.tree.map(lambda s: s, m_sh),
+        "step": rep,
+    }
+
+
+def batch_shardings(mesh: Mesh, batch_tree: Any,
+                    axes: Optional[tuple] = None) -> Any:
+    from repro.launch.mesh import batch_axes
+    bax = tuple(axes) if axes is not None else batch_axes(mesh)
+
+    def one(leaf):
+        b = leaf.shape[0]
+        # use the longest prefix of batch axes that divides the batch
+        use = list(bax)
+        while use and b % int(np.prod([mesh.shape[a] for a in use])):
+            use.pop()
+        if use:
+            return NamedSharding(mesh, P(tuple(use)))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
+                    long_context: bool = False,
+                    axes: Optional[tuple] = None,
+                    model_axis: Optional[str] = "model") -> Any:
+    """KV caches (R, B, S, Hkv, D) / SSM states (R, B, H, P, N).
+
+    decode: batch on the data axes; long-context (batch=1): KV sequence dim
+    on data instead.  Model-axis sharding: kv-heads / ssm-heads when
+    divisible.
+    """
+    from repro.launch.mesh import batch_axes
+    bax = tuple(axes) if axes is not None else batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in bax]))
+    msz = (mesh.shape[model_axis]
+           if model_axis and model_axis in mesh.axis_names else 1)
+
+    def one_path(path, leaf):
+        name = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        if name.endswith("['length']"):
+            return NamedSharding(mesh, P())
+        entries = [None] * len(shape)
+        if "'k'" in name or "'v'" in name:          # (R, B, S, Hkv, D)
+            if long_context:
+                if shape[2] % nb == 0 and nb > 1:
+                    entries[2] = bax if len(bax) > 1 else bax[0]
+            else:
+                if shape[1] % nb == 0 and nb > 1:
+                    entries[1] = bax if len(bax) > 1 else bax[0]
+                # kv heads rarely divide the TP axis; the seq dim always does
+                if msz > 1 and shape[2] % msz == 0:
+                    entries[2] = model_axis
+        elif "'ssm'" in name:                       # (R, B, H, P, N)
+            if shape[1] % nb == 0 and nb > 1:
+                entries[1] = bax if len(bax) > 1 else bax[0]
+            if msz > 1 and shape[2] % msz == 0:
+                entries[2] = model_axis
+        elif "'conv'" in name:                      # (R, B, W-1, C)
+            if shape[1] % nb == 0 and nb > 1:
+                entries[1] = bax if len(bax) > 1 else bax[0]
+            if msz > 1 and shape[3] % msz == 0:
+                entries[3] = model_axis
+        return NamedSharding(mesh, P(*entries))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one_path(p, l) for p, l in flat])

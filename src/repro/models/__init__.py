@@ -1,0 +1,7 @@
+"""Model zoo: one DecoderModel machinery for all assigned architectures."""
+
+from repro.models.model import (ModelConfig, forward, init_caches,
+                                init_params, next_token_loss, param_count)
+
+__all__ = ["ModelConfig", "forward", "init_caches", "init_params",
+           "next_token_loss", "param_count"]

@@ -1,0 +1,268 @@
+"""GQA attention: flash-style chunked prefill/train + KV-cache decode.
+
+Grouped formulation throughout — queries reshape to (B, S, G, R, D) with
+G = kv heads and R = group size, so KV is *never* materialized repeated
+(R x memory saving, and GSPMD keeps the cache sharding intact).
+
+* ``flash_attention`` — online-softmax ``lax.scan`` over KV chunks; peak
+  activation memory O(S * kv_chunk) per head instead of O(S^2): this is what
+  lets 32k-prefill fit the dry-run memory budget.  Softmax statistics in f32.
+* ``_decode_attention`` — single-token path: one masked einsum over the
+  cache.  With the cache sequence-sharded on the TP axis the partial scores
+  stay local and XLA inserts only tiny (B, G, R) softmax-stat collectives.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, rms_norm
+from repro.models.sharding import shard
+
+NEG_INF = -1e30
+
+
+def _grouped(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    q_positions: jnp.ndarray, kv_positions: jnp.ndarray,
+                    causal: bool = True, kv_chunk: int = 1024,
+                    kv_valid_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Skv, G, D).  Returns (B, Sq, H, D).
+
+    Custom VJP: the backward recomputes each chunk's P from the saved
+    softmax statistics (O(S) residuals) — letting lax.scan's default VJP
+    stack every chunk's (B,G,R,Sq,C) f32 probabilities measured +2 TB of
+    HBM traffic per MoE train step (§Perf log).
+    """
+    b, sq, h, d = q.shape
+    if sq == 1:
+        return _decode_attention(q, k, v, q_positions, kv_positions,
+                                 kv_valid_len)
+    has_valid = kv_valid_len is not None
+    fn = _make_flash(causal, min(kv_chunk, k.shape[1]), has_valid)
+    valid = kv_valid_len if has_valid else jnp.zeros((b,), jnp.int32)
+    return fn(q, k, v, q_positions, kv_positions, valid)
+
+
+def _chunk_mask(pb, q_positions, ci, kv_chunk, valid, causal, has_valid):
+    mask = jnp.ones((pb.shape[0], 1, 1, q_positions.shape[1],
+                     pb.shape[1]), bool)
+    if causal:
+        mask = (pb[:, None, None, None, :]
+                <= q_positions[:, None, None, :, None])
+    if has_valid:
+        idx = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = mask & (idx[None, None, None, None, :]
+                       < valid[:, None, None, None, None])
+    return mask
+
+
+import functools as _ft
+
+
+@_ft.lru_cache(maxsize=None)
+def _make_flash(causal: bool, kv_chunk: int, has_valid: bool):
+
+    def _chunks(q, k, v, kv_positions):
+        b, sq, h, d = q.shape
+        skv, g = k.shape[1], k.shape[2]
+        n_chunks = -(-skv // kv_chunk)
+        pad = n_chunks * kv_chunk - skv
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                                   constant_values=2 ** 30)
+        kc = k.reshape(b, n_chunks, kv_chunk, g, d).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(b, n_chunks, kv_chunk, g, d).transpose(1, 0, 2, 3, 4)
+        pc = kv_positions.reshape(b, n_chunks, kv_chunk).transpose(1, 0, 2)
+        return kc, vc, pc, n_chunks, pad
+
+    def _forward(q, k, v, q_positions, kv_positions, valid):
+        b, sq, h, d = q.shape
+        g = k.shape[2]
+        r = h // g
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        kc, vc, pc, n_chunks, _ = _chunks(q, k, v, kv_positions)
+        qg = _grouped(q, g)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            kb, vb, pb, ci = xs
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _chunk_mask(pb, q_positions, ci, kv_chunk, valid,
+                               causal, has_valid)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(q.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, r, sq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, r, sq), jnp.float32)
+        a0 = jnp.zeros((b, g, r, sq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (kc, vc, pc, jnp.arange(n_chunks)))
+        out_g = acc / jnp.maximum(l[..., None], 1e-30)   # (B,G,R,Sq,D) f32
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))         # (B,G,R,Sq)
+        out = out_g.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+        return out.astype(q.dtype), out_g, lse
+
+    @jax.custom_vjp
+    def flash(q, k, v, q_positions, kv_positions, valid):
+        return _forward(q, k, v, q_positions, kv_positions, valid)[0]
+
+    def fwd(q, k, v, q_positions, kv_positions, valid):
+        out, out_g, lse = _forward(q, k, v, q_positions, kv_positions, valid)
+        return out, (q, k, v, q_positions, kv_positions, valid, out_g, lse)
+
+    def bwd(res, dout):
+        q, k, v, q_positions, kv_positions, valid, out_g, lse = res
+        b, sq, h, d = q.shape
+        g = k.shape[2]
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+        kc, vc, pc, n_chunks, pad = _chunks(q, k, v, kv_positions)
+        qg = _grouped(q, g)
+        do = _grouped(dout, g).transpose(0, 2, 3, 1, 4)  # (B,G,R,Sq,D) f32?
+        do = do.astype(jnp.float32)
+        # D_i = rowsum(dO * O)
+        delta = jnp.sum(do * out_g, axis=-1)             # (B,G,R,Sq)
+
+        def body(dq_acc, xs):
+            kb, vb, pb, ci = xs
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _chunk_mask(pb, q_positions, ci, kv_chunk, valid,
+                               causal, has_valid)
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lse[..., None])              # (B,G,R,Sq,C)
+            dv = jnp.einsum("bgrqk,bgrqd->bkgd", p.astype(q.dtype), do)
+            dp = jnp.einsum("bgrqd,bkgd->bgrqk", do, vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[..., None]) * scale
+            dsq = ds.astype(q.dtype)
+            dq_c = jnp.einsum("bgrqk,bkgd->bqgrd", dsq, kb,
+                              preferred_element_type=jnp.float32)
+            dk = jnp.einsum("bgrqk,bqgrd->bkgd", dsq, qg,
+                            preferred_element_type=jnp.float32)
+            return dq_acc + dq_c, (dk, dv)
+
+        dq0 = jnp.zeros(qg.shape, jnp.float32)
+        dq_g, (dkc, dvc) = jax.lax.scan(
+            body, dq0, (kc, vc, pc, jnp.arange(n_chunks)))
+        dq = dq_g.reshape(b, sq, h, d).astype(q.dtype)
+        skv_p = n_chunks * kv_chunk
+        dk = dkc.transpose(1, 0, 2, 3, 4).reshape(b, skv_p, g, d)
+        dv = dvc.transpose(1, 0, 2, 3, 4).reshape(b, skv_p, g, d)
+        if pad:
+            dk = dk[:, : k.shape[1]]
+            dv = dv[:, : v.shape[1]]
+        return (dq, dk.astype(k.dtype), dv.astype(v.dtype), None, None, None)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def _decode_attention(q, k, v, q_positions, kv_positions, kv_valid_len):
+    """q: (B, 1, H, D) against the full cache — single masked einsum."""
+    b, _, h, d = q.shape
+    g = k.shape[2]
+    qg = _grouped(q, g)[:, 0]                            # (B, G, R, D)
+    # bf16 cache reads with f32 accumulation — the cache is never copied
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    mask = kv_positions[:, None, None, :] <= q_positions[:, None, None, :1]
+    if kv_valid_len is not None:
+        idx = jnp.arange(k.shape[1])
+        mask = mask & (idx[None, None, None, :]
+                       < kv_valid_len[:, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray            # (B, S_max, G, D)
+    v: jnp.ndarray
+    length: jnp.ndarray       # () int32 — tokens currently valid
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16, length: int = 0) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        length=jnp.asarray(length, jnp.int32),
+    )
+
+
+def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
+              cache: Optional[KVCache] = None, quant: bool = False):
+    """Full GQA block body (pre-norm residual handled by caller).
+
+    Returns ``(attn_out, new_cache)``.  With ``cache`` given, ``x`` is the
+    new-token slice (decode: S=1) appended at ``cache.length``.
+    """
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = dense(p["wq"], x, p.get("bq"), p.get("wq_q") if quant else None)
+    k = dense(p["wk"], x, p.get("bk"), p.get("wk_q") if quant else None)
+    v = dense(p["wv"], x, p.get("bv"), p.get("wv_q") if quant else None)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q = shard(q, "bthd")
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = flash_attention(q, k, v, positions, positions, causal=True,
+                              kv_chunk=cfg.kv_chunk)
+        new_cache = None
+    else:
+        idx = cache.length
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), idx, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), idx, axis=1)
+        kc = shard(kc, "cache")
+        vc = shard(vc, "cache")
+        new_len = idx + s
+        if s == 1:
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(kc.shape[1], dtype=jnp.int32), (b, kc.shape[1]))
+            out = flash_attention(q, kc, vc, positions, kv_pos, causal=True,
+                                  kv_chunk=cfg.kv_chunk,
+                                  kv_valid_len=jnp.broadcast_to(new_len, (b,)))
+        else:
+            # prefill (cache assumed empty before this call): attend over the
+            # fresh K/V — avoids streaming the seq-sharded cache back through
+            # the chunk scan (the cache write above is the only cache access)
+            out = flash_attention(q, k, v, positions, positions, causal=True,
+                                  kv_chunk=cfg.kv_chunk)
+        new_cache = KVCache(k=kc, v=vc, length=new_len)
+
+    out = out.reshape(b, s, h * hd)
+    y = dense(p["wo"], out, quant=p.get("wo_q") if quant else None)
+    return y, new_cache

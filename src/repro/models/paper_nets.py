@@ -1,0 +1,156 @@
+"""The paper's five workloads (Table I) as JAX forward passes that record
+the *input activations of every FC/CONV GEMM* — exactly the tensors QeiHaN
+LOG2-quantizes.  Used by benchmarks/fig2 (exponent histograms), fig3
+(estimated memory savings) and as the measured-stats source for the
+simulator (Figs. 9-12).
+
+No pretrained weights are available offline; weights are random with
+publication-standard initializers and inputs are synthetic.  Activation
+*distributions* after normalization/ReLU are what matter for the paper's
+observation (exponents concentrate below 0), and those are shape- and
+normalizer-driven; EXPERIMENTS.md reports both these measured stats and the
+paper-digitized presets (simulator/stats.paper_preset) side by side.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Acts = List[Tuple[str, jnp.ndarray]]
+
+
+def _dense(key, k, n, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(k)
+    return jax.random.normal(key, (k, n), jnp.float32) * scale
+
+
+def _layer_norm(x):
+    mu = jnp.mean(x, -1, keepdims=True)
+    v = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(v + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# AlexNet (5 CONV + 3 FC), batch 1, 227x227 ImageNet-style input
+# ---------------------------------------------------------------------------
+
+def alexnet_activations(key) -> Acts:
+    ks = iter(jax.random.split(key, 16))
+    x = jax.random.normal(next(ks), (1, 227, 227, 3), jnp.float32)
+    acts: Acts = []
+
+    def convrelu(name, x, oc, kh, stride, pad):
+        ic = x.shape[-1]
+        acts.append((name, x))
+        w = jax.random.normal(next(ks), (kh, kh, ic, oc)) * jnp.sqrt(2.0 / (kh * kh * ic))
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y)
+
+    def maxpool(x):
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 3, 3, 1), (1, 2, 2, 1), "VALID")
+
+    x = convrelu("conv1", x, 96, 11, 4, 0); x = maxpool(x)
+    x = convrelu("conv2", x, 256, 5, 1, 2); x = maxpool(x)
+    x = convrelu("conv3", x, 384, 3, 1, 1)
+    x = convrelu("conv4", x, 384, 3, 1, 1)
+    x = convrelu("conv5", x, 256, 3, 1, 1); x = maxpool(x)
+    x = x.reshape(1, -1)
+    for name, n in [("fc6", 4096), ("fc7", 4096), ("fc8", 1000)]:
+        acts.append((name, x))
+        x = jax.nn.relu(x @ _dense(next(ks), x.shape[-1], n, jnp.sqrt(2.0 / x.shape[-1])))
+    return acts
+
+
+# ---------------------------------------------------------------------------
+# PTBLM: 2-layer LSTM, hidden 1500 (Zaremba'14 "large")
+# ---------------------------------------------------------------------------
+
+def ptblm_activations(key, seq: int = 35, hidden: int = 1500) -> Acts:
+    ks = iter(jax.random.split(key, 8))
+    emb = jax.random.normal(next(ks), (seq, hidden)) * 0.1   # embedded tokens
+    acts: Acts = []
+    ws = [_dense(next(ks), 2 * hidden, 4 * hidden) for _ in range(2)]
+
+    def lstm_layer(inputs, w, lname):
+        h = jnp.zeros((hidden,))
+        c = jnp.zeros((hidden,))
+        outs = []
+        gate_ins = []
+        for t in range(seq):
+            xin = jnp.concatenate([inputs[t], h])
+            gate_ins.append(xin)
+            g = xin @ w
+            i, f, o, u = jnp.split(g, 4)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(u)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            outs.append(h)
+        acts.append((lname, jnp.stack(gate_ins)))
+        return jnp.stack(outs)
+
+    x = lstm_layer(emb, ws[0], "lstm0")
+    x = lstm_layer(x, ws[1], "lstm1")
+    acts.append(("softmax_in", x))
+    return acts
+
+
+# ---------------------------------------------------------------------------
+# Transformer / BERT encoders
+# ---------------------------------------------------------------------------
+
+def _encoder_activations(key, n_layers: int, d: int, ff: int, seq: int,
+                         act_fn=jax.nn.gelu) -> Acts:
+    ks = iter(jax.random.split(key, 6 * n_layers + 2))
+    x = jax.random.normal(next(ks), (seq, d)) * 1.0
+    x = _layer_norm(x)
+    acts: Acts = []
+    nh = max(d // 64, 1)
+    for l in range(n_layers):
+        h = _layer_norm(x)
+        acts.append((f"l{l}.qkv_in", h))
+        q = h @ _dense(next(ks), d, d)
+        k = h @ _dense(next(ks), d, d)
+        v = h @ _dense(next(ks), d, d)
+        qh = q.reshape(seq, nh, -1).transpose(1, 0, 2)
+        kh = k.reshape(seq, nh, -1).transpose(1, 0, 2)
+        vh = v.reshape(seq, nh, -1).transpose(1, 0, 2)
+        a = jax.nn.softmax(qh @ kh.transpose(0, 2, 1) / jnp.sqrt(d / nh), -1)
+        o = (a @ vh).transpose(1, 0, 2).reshape(seq, d)
+        acts.append((f"l{l}.o_in", o))
+        x = x + o @ _dense(next(ks), d, d)
+        h2 = _layer_norm(x)
+        acts.append((f"l{l}.ff1_in", h2))
+        u = act_fn(h2 @ _dense(next(ks), d, ff))
+        acts.append((f"l{l}.ff2_in", u))
+        x = x + u @ _dense(next(ks), ff, d)
+    return acts
+
+
+def transformer_activations(key, seq: int = 128) -> Acts:
+    # 6 encoder + 6 decoder blocks, d=512, ff=2048, ReLU (Vaswani'17)
+    k1, k2 = jax.random.split(key)
+    enc = _encoder_activations(k1, 6, 512, 2048, seq, act_fn=jax.nn.relu)
+    dec = _encoder_activations(k2, 6, 512, 2048, seq, act_fn=jax.nn.relu)
+    return enc + [(f"dec_{n}", a) for n, a in dec]
+
+
+def bert_base_activations(key, seq: int = 128) -> Acts:
+    return _encoder_activations(key, 12, 768, 3072, seq)
+
+
+def bert_large_activations(key, seq: int = 128) -> Acts:
+    return _encoder_activations(key, 24, 1024, 4096, seq)
+
+
+PAPER_ACTIVATIONS: Dict[str, Callable] = {
+    "alexnet": alexnet_activations,
+    "ptblm": ptblm_activations,
+    "transformer": transformer_activations,
+    "bert-base": bert_base_activations,
+    "bert-large": bert_large_activations,
+}

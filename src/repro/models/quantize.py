@@ -1,0 +1,83 @@
+"""First-class QeiHaN integration: convert a model's projection weights to
+the LOG2-activation / bit-plane-weight shift-add representation.
+
+``quantize_model_params`` walks the param tree and, for every projection the
+technique applies to (DESIGN.md §Arch-applicability: attention QKV/O,
+dense/shared MLP, Mamba in/out projections, lm_head), attaches a
+``QuantizedLinearParams`` under ``<name>_q``.  Layers keep their float
+weights too (used for anything the quant path doesn't cover and for
+side-by-side evaluation).  Stacked (scan) leaves are quantized with vmap
+over the repeat dim.
+
+Routed MoE expert weights stay float (the EP shard_map path owns them);
+routers/norms/rotaries are excluded per the paper (§II-A scopes LOG2 to
+FC/CONV GEMMs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.core.shiftadd import quantized_linear_init
+from repro.models.model import ModelConfig
+
+# projection leaves eligible for the QeiHaN path, per block kind
+_ATTN_PROJ = ("wq", "wk", "wv", "wo")
+_MLP_PROJ = ("gate", "up", "down")
+_MAMBA_PROJ = ("wz", "wx", "out_proj")
+
+
+def _quantize_stacked(w, act_scale: float = 1.0, pack: bool = False):
+    """w: (R, K, N) stacked over scan repeats -> stacked quant params."""
+    from repro.core.bitplane import pack_planes
+
+    def one(m):
+        q = quantized_linear_init(m, act_scale=act_scale)
+        if pack:
+            q = q._replace(planes=pack_planes(q.planes, axis=0))
+        return q
+    return jax.vmap(one)(w)
+
+
+def quantize_model_params(cfg: ModelConfig, params: Dict[str, Any],
+                          act_scale: float = 1.0,
+                          drop_float: bool = False,
+                          pack: bool = False) -> Dict[str, Any]:
+    """``drop_float=True`` replaces each quantized projection's float weight
+    with a scalar placeholder — the deployment configuration where only the
+    bit-plane representation is resident in HBM (the dry-run memory story)."""
+    import jax.numpy as jnp
+
+    def _maybe_drop(blk, name):
+        if drop_float:
+            # keep the scan's leading repeat dim on the placeholder
+            blk[name] = jnp.zeros((cfg.repeats, 1), cfg.dtype)
+
+    out = jax.tree.map(lambda x: x, params)        # shallow-ish copy
+    blocks = []
+    for i, kind in enumerate(cfg.pattern):
+        blk = dict(out["blocks"][i])
+        base = kind.split("_")[0]
+        names = _ATTN_PROJ if base == "attn" else _MAMBA_PROJ
+        for name in names:
+            if name in blk:
+                blk[name + "_q"] = _quantize_stacked(blk[name], act_scale, pack)
+                _maybe_drop(blk, name)
+        if "mlp" in blk:
+            mlp = dict(blk["mlp"])
+            if "experts" not in mlp:               # dense MLP
+                for name in _MLP_PROJ:
+                    mlp[name + "_q"] = _quantize_stacked(mlp[name], act_scale, pack)
+                    _maybe_drop(mlp, name)
+            if "shared" in mlp:
+                sh = dict(mlp["shared"])
+                for name in _MLP_PROJ:
+                    sh[name + "_q"] = _quantize_stacked(sh[name], act_scale, pack)
+                    _maybe_drop(sh, name)
+                mlp["shared"] = sh
+            blk["mlp"] = mlp
+        blocks.append(blk)
+    out["blocks"] = tuple(blocks)
+    return out

@@ -1,0 +1,143 @@
+"""Activation-sharding context for the model zoo.
+
+Models place ``shard(x, kind)`` hints at the canonical Megatron/SP points;
+the launcher configures which mesh axes those hints bind to (and their
+sizes).  When no axes are configured (unit tests, single-device smoke runs)
+the hints are no-ops, so the same model code runs everywhere.
+
+Every hint is **divisibility-checked**: a dim whose size doesn't divide the
+bound axis size stays unsharded (e.g. smollm's 9 heads under 16-way TP) —
+this mirrors the param-rule fallback and avoids GSPMD involuntary
+rematerialization/replication.
+
+Kinds:
+  ``btd``   — residual stream (batch, seq, d): batch on DP axes, seq on the
+              TP axis (sequence parallelism) so scan-carried remat residuals
+              are distributed.
+  ``btf``   — MLP hidden (batch, seq, ff): ff on TP.
+  ``bthd``  — attention heads (batch, seq, heads, head_dim): heads on TP.
+  ``btv``   — logits (batch, seq, vocab): vocab on TP.
+  ``ecd``   — MoE expert buffers (experts, capacity, d): experts on TP (EP).
+  ``cache`` — KV cache (batch, seq, kv_heads, hd): seq on DP for
+              long-context decode (batch=1 there), else batch on DP.
+  ``bshp``/``bchll``/``bchpn`` — SSD tensors: ssm-heads on TP.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+_KIND_LAYOUT = {
+    # kind -> list of (role) per dim; roles: 'b' batch, 's' seq (SP),
+    # 'm' model, None replicate
+    "btd": ("b", "s", None),
+    "btf": ("b", None, "m"),
+    "bthd": ("b", None, "m", None),
+    "btv": ("b", None, "m"),
+    "ecd": ("m", None, None),
+    "bshp": ("b", None, "m", None),
+    "bchll": ("b", None, "m", None, None),
+    "bchpn": ("b", None, "m", None, None),
+    "cache": ("b", "cs", None, None),
+}
+
+
+def _axes():
+    return getattr(_state, "axes", None)
+
+
+@contextlib.contextmanager
+def mesh_axes(batch: Sequence[str] | str | None = ("data",),
+              model: Optional[str] = "model",
+              seq_shard: bool = True,
+              cache_seq_axis: Optional[str] = None,
+              sizes: Optional[Dict[str, int]] = None,
+              mesh=None,
+              ep_axis: Optional[str] = None):
+    """Bind sharding hints to mesh axis names for the enclosed scope.
+
+    ``sizes`` maps axis name -> size for divisibility checks (pass
+    ``dict(mesh.shape)``); without it hints are applied unchecked.
+    ``mesh`` (optional) enables shard_map-based blocks (manual-EP MoE);
+    ``ep_axis`` names the expert-parallel axis (defaults to ``model``).
+    """
+    prev = _axes()
+    batch_t = tuple(batch) if isinstance(batch, (tuple, list)) else (
+        (batch,) if batch else ())
+    if mesh is not None and sizes is None:
+        sizes = dict(mesh.shape)
+    _state.axes = dict(batch=batch_t, model=model, seq_shard=seq_shard,
+                       cache_seq_axis=cache_seq_axis, sizes=sizes or {},
+                       mesh=mesh, ep_axis=ep_axis if ep_axis else model)
+    try:
+        yield
+    finally:
+        _state.axes = prev
+
+
+def current() -> Optional[dict]:
+    """The active mesh-axes binding (None outside any mesh_axes scope)."""
+    return _axes()
+
+
+def _fits(dim_size: int, axis, sizes: Dict[str, int]) -> bool:
+    if axis is None:
+        return False
+    names = axis if isinstance(axis, tuple) else (axis,)
+    total = 1
+    for n in names:
+        total *= sizes.get(n, 1)
+    if total <= 1:
+        return False
+    return dim_size % total == 0
+
+
+def spec_for(kind: str, shape) -> Optional[P]:
+    ax = _axes()
+    if ax is None:
+        return None
+    layout = _KIND_LAYOUT.get(kind)
+    if layout is None:
+        raise ValueError(f"unknown sharding kind {kind!r}")
+    if len(layout) != len(shape):
+        return None
+    sizes = ax["sizes"]
+    b = ax["batch"] if ax["batch"] else None
+    m = ax["model"]
+    entries = []
+    for role, dim in zip(layout, shape):
+        target = None
+        if role == "b":
+            target = b
+        elif role == "m":
+            target = m
+        elif role == "s":
+            target = m if ax["seq_shard"] else None
+        elif role == "cs":
+            # KV-cache sequence dim: explicit long-context axis, else the TP
+            # axis (kv heads rarely divide 16-way TP; the seq dim always does)
+            target = ax["cache_seq_axis"] or m
+        if target is not None and (not sizes or _fits(dim, target, sizes)):
+            entries.append(target)
+        else:
+            entries.append(None)
+    if all(e is None for e in entries):
+        return None
+    return P(*entries)
+
+
+def shard(x: jax.Array, kind: str) -> jax.Array:
+    s = spec_for(kind, x.shape)
+    if s is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, s)
+    except (ValueError, TypeError):
+        return x

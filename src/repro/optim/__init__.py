@@ -1,0 +1,4 @@
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compress import compressed_psum_mean, init_error
+__all__ = ["adamw", "AdamWConfig", "compressed_psum_mean", "init_error"]

@@ -1,0 +1,3 @@
+from repro.serving.engine import (greedy_generate, make_prefill_step,
+                                  make_serve_step)
+__all__ = ["greedy_generate", "make_prefill_step", "make_serve_step"]

@@ -1,0 +1,66 @@
+"""Serving layer: prefill + single-token decode (the dry-run ``serve_step``)
+and a batched autoregressive generate loop for the examples."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, forward, init_caches
+
+
+def make_prefill_step(cfg: ModelConfig, quant: bool = False):
+    """(params, batch) -> (last-token logits, caches).
+
+    Runs the full forward over the prompt while writing the KV/SSM caches.
+    This is what the ``prefill_32k`` shape lowers.
+    """
+    def prefill_step(params, batch, caches):
+        logits, caches = forward(
+            cfg, params,
+            tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            image_embeds=batch.get("image_embeds"),
+            caches=caches, quant=quant)
+        return logits[:, -1], caches
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, quant: bool = False):
+    """(params, caches, token) -> (logits, caches): ONE new token against a
+    pre-filled cache.  This is what ``decode_32k`` / ``long_500k`` lower."""
+    def serve_step(params, caches, token):
+        if cfg.frontend == "audio_stub":
+            # audio stub decodes from a frame embedding, not a token id
+            logits, caches = forward(cfg, params, embeds=token, caches=caches,
+                                     quant=quant)
+        else:
+            logits, caches = forward(cfg, params, tokens=token, caches=caches,
+                                     quant=quant)
+        return logits[:, -1], caches
+    return serve_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
+                    max_new: int, *, temperature: float = 0.0,
+                    key: Optional[jax.Array] = None,
+                    quant: bool = False) -> jnp.ndarray:
+    """Batched autoregressive generation (example/demo path)."""
+    b, s = prompt.shape
+    caches = init_caches(cfg, b, max_len=s + max_new, dtype=cfg.dtype)
+    prefill = jax.jit(make_prefill_step(cfg, quant))
+    step = jax.jit(make_serve_step(cfg, quant))
+    logits, caches = prefill(params, {"tokens": prompt}, caches)
+
+    toks = []
+    cur = None
+    for i in range(max_new):
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            cur = jnp.argmax(logits, axis=-1)
+        toks.append(cur)
+        logits, caches = step(params, caches, cur[:, None])
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,12 @@
+"""NDP accelerator simulator: Neurocube / NaHiD / QeiHaN (paper §V-§VI)."""
+
+from repro.simulator.config import (ALL_ACCELERATORS, NAHID, NEUROCUBE,
+                                    QEIHAN, AcceleratorConfig, EnergyModel)
+from repro.simulator.engine import LayerResult, SimResult, simulate, simulate_layer
+from repro.simulator.stats import (ActStats, gaussian_stats, measure,
+                                   paper_preset)
+from repro.simulator.workload import (PAPER_WORKLOADS, LayerWork, alexnet,
+                                      bert_base, bert_large, conv, fc, ptblm,
+                                      transformer_base)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

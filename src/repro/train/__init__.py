@@ -1,0 +1,2 @@
+from repro.train.trainer import TrainConfig, make_train_step, train_loop
+__all__ = ["TrainConfig", "make_train_step", "train_loop"]

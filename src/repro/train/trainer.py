@@ -1,0 +1,113 @@
+"""Train-step builders: pjit path (DP/TP/EP/SP via sharding constraints),
+microbatch gradient accumulation, straggler watchdog, resume-able loop."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, next_token_loss
+from repro.optim import adamw
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+    micro_batches: int = 1              # gradient accumulation factor
+    quant: bool = False                 # QeiHaN-quantized projections
+
+
+def make_loss_fn(cfg: ModelConfig, quant: bool = False) -> Callable:
+    def loss_fn(params, batch):
+        return next_token_loss(cfg, params, batch, quant=quant)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    With ``micro_batches > 1`` the batch's leading dim is split and grads are
+    accumulated in f32 via ``lax.scan`` (compute/memory trade controlled by
+    the caller); loss is the microbatch mean.
+    """
+    loss_fn = make_loss_fn(cfg, tcfg.quant)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.micro_batches <= 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            n = tcfg.micro_batches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                tot_loss, tot_g = carry
+                loss, g = grad_fn(params, mb)
+                tot_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), tot_g, g)
+                return (tot_loss + loss, tot_g), None
+
+            (loss, grads), _ = jax.lax.scan(acc, (0.0, zeros), micro)
+            loss = loss / n
+            grads = jax.tree.map(lambda g: g / n, grads)
+
+        params, opt_state, metrics = adamw.update(
+            tcfg.optimizer, grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class StragglerWatchdog:
+    """Tracks per-step wall time; flags steps slower than ``factor`` x the
+    running median.  At cluster scale the flag feeds the orchestration layer
+    (preempt/replace the slow host); here it logs and counts."""
+
+    def __init__(self, factor: float = 3.0, warmup: int = 3):
+        self.factor = factor
+        self.warmup = warmup
+        self.times = []
+        self.flagged = 0
+
+    def observe(self, seconds: float) -> bool:
+        self.times.append(seconds)
+        if len(self.times) <= self.warmup:
+            return False
+        hist = sorted(self.times[:-1])
+        median = hist[len(hist) // 2]
+        slow = seconds > self.factor * median
+        self.flagged += int(slow)
+        return slow
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, params, opt_state,
+               batches, *, step0: int = 0, jit: bool = True,
+               hook: Optional[Callable[[int, Dict[str, Any]], None]] = None):
+    """Generic host loop used by examples and tests (single-process path;
+    the production launcher in launch/train.py adds mesh + checkpointing)."""
+    step_fn = make_train_step(cfg, tcfg)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    watchdog = StragglerWatchdog()
+    metrics = {}
+    for step, batch in enumerate(batches, start=step0):
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        slow = watchdog.observe(dt)
+        if hook:
+            hook(step, {**metrics, "step_time_s": dt, "straggler": slow})
+    return params, opt_state, metrics

@@ -1,0 +1,106 @@
+"""Flash attention (custom VJP) and cache-dtype tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import forward, init_caches, init_params
+from repro.models.attention import flash_attention
+
+
+def naive_attention(q, k, v, qp, kp):
+    b, sq, h, d = q.shape
+    g = k.shape[2]
+    r = h // g
+    qg = q.reshape(b, sq, g, r, d)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k) / jnp.sqrt(d * 1.0)
+    mask = kp[:, None, None, None, :] <= qp[:, None, None, :, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v)
+    return o.reshape(b, sq, h, d)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("chunk", [8, 16, 48])
+    @pytest.mark.parametrize("gqa", [(8, 4), (6, 6), (4, 1)])
+    def test_forward_matches_naive(self, chunk, gqa):
+        h, g = gqa
+        key = jax.random.PRNGKey(h * g + chunk)
+        B, S, D = 2, 48, 16
+        q = jax.random.normal(key, (B, S, h, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, g, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, g, D))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        o1 = flash_attention(q, k, v, pos, pos, causal=True, kv_chunk=chunk)
+        o2 = naive_attention(q, k, v, pos, pos)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=2e-6, rtol=2e-5)
+
+    def test_custom_vjp_matches_autodiff(self):
+        key = jax.random.PRNGKey(0)
+        B, S, H, G, D = 2, 40, 8, 4, 16
+        q = jax.random.normal(key, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, G, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, G, D))
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        # weighted sum so cotangents are non-uniform
+        w = jax.random.normal(jax.random.fold_in(key, 3), (B, S, H, D))
+
+        def f_flash(q, k, v):
+            return (flash_attention(q, k, v, pos, pos, causal=True,
+                                    kv_chunk=16) * w).sum()
+
+        def f_naive(q, k, v):
+            return (naive_attention(q, k, v, pos, pos) * w).sum()
+
+        g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=5e-5, rtol=1e-4)
+
+    def test_valid_len_masks_cache_tail(self):
+        key = jax.random.PRNGKey(4)
+        B, S, H, G, D = 1, 32, 4, 2, 8
+        q = jax.random.normal(key, (B, 1, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, G, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, G, D))
+        qp = jnp.full((B, 1), 15)
+        kp = jnp.broadcast_to(jnp.arange(S), (B, S))
+        out_a = flash_attention(q, k, v, qp, kp,
+                                kv_valid_len=jnp.asarray([16]))
+        # zeroing the tail beyond valid_len must not change the result
+        k2 = k.at[:, 16:].set(99.0)
+        v2 = v.at[:, 16:].set(99.0)
+        out_b = flash_attention(q, k2, v2, qp, kp,
+                                kv_valid_len=jnp.asarray([16]))
+        np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                                   atol=1e-6)
+
+
+class TestCacheDtype:
+    def test_f8_cache_decode_correlates(self):
+        cfg = get_smoke("qwen3_32b").replace(dtype=jnp.float32)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 12
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                    cfg.vocab_size)
+        full, _ = forward(cfg, params, tokens=tokens)
+        caches = init_caches(cfg, B, max_len=S, dtype=jnp.float8_e4m3fn)
+        outs = []
+        for t in range(S):
+            lg, caches = forward(cfg, params, tokens=tokens[:, t:t + 1],
+                                 caches=caches)
+            outs.append(lg[:, 0])
+        dec = jnp.stack(outs, 1)
+        corr = np.corrcoef(np.asarray(full).ravel(),
+                           np.asarray(dec).ravel())[0, 1]
+        assert corr > 0.98, corr
+
+    def test_cache_dtype_config_plumbs(self):
+        cfg = get_smoke("qwen3_32b").replace(cache_dtype=jnp.float8_e4m3fn)
+        caches = init_caches(cfg, 2, 8)
+        assert caches["layers"][0]["k"].dtype == jnp.float8_e4m3fn

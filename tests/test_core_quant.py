@@ -1,0 +1,213 @@
+"""Unit + property tests for the QeiHaN core quantization math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (calibrate_act_scale, from_bitplanes, log2_dequantize,
+                        log2_quantize, log2_quantize_naive, needed_bits,
+                        pack_codes, pack_planes, quantize_weights,
+                        quantized_linear_apply, quantized_linear_init,
+                        shift_product, shiftadd_matmul_bitplane,
+                        shiftadd_matmul_elementwise, shiftadd_matmul_exact,
+                        to_bitplanes, unpack_codes, unpack_planes,
+                        weight_access_report, zero_sentinel)
+from repro.core.logquant import LogQuantized
+
+finite_f32 = st.floats(min_value=-1e4, max_value=1e4, width=32,
+                       allow_nan=False, allow_infinity=False)
+
+
+# ---------------------------------------------------------------------------
+# LOG2 quantization (paper Eqs. 2-4, Fig. 5)
+# ---------------------------------------------------------------------------
+
+class TestLog2Quant:
+    def test_exact_powers_of_two(self):
+        x = jnp.asarray([2.0 ** e for e in range(-7, 8)], jnp.float32)
+        q = log2_quantize(x)
+        assert q.exp.tolist() == list(range(-7, 8))
+        assert jnp.all(q.sign == 1)
+
+    def test_zero_and_negatives(self):
+        q = log2_quantize(jnp.asarray([0.0, -0.0, -4.0, 4.0], jnp.float32))
+        assert q.exp[0] == zero_sentinel() and q.exp[1] == zero_sentinel()
+        assert q.exp[2] == 2 and q.sign[2] == -1
+        assert q.exp[3] == 2 and q.sign[3] == 1
+
+    def test_small_values_prune(self):
+        # anything rounding below -8 prunes to the sentinel
+        q = log2_quantize(jnp.asarray([1e-30, 2.0 ** -9, 2.0 ** -20],
+                                      jnp.float32))
+        assert jnp.all(q.exp == zero_sentinel())
+
+    def test_clip_to_max(self):
+        q = log2_quantize(jnp.asarray([1e30, jnp.inf], jnp.float32))
+        assert jnp.all(q.exp == 7)
+
+    def test_nan_prunes(self):
+        q = log2_quantize(jnp.asarray([jnp.nan], jnp.float32))
+        assert q.exp[0] == zero_sentinel()
+
+    def test_sqrt2_boundary(self):
+        # below sqrt(2) rounds down, above rounds up; f32(sqrt2) < sqrt2
+        lo = np.float32(np.sqrt(2.0)) - np.float32(1e-6)
+        hi = np.float32(np.sqrt(2.0)) + np.float32(1e-6)
+        q = log2_quantize(jnp.asarray([lo, hi]))
+        assert q.exp[0] == 0 and q.exp[1] == 1
+
+    @settings(max_examples=300, deadline=None)
+    @given(st.lists(finite_f32, min_size=1, max_size=64))
+    def test_comparator_matches_naive(self, xs):
+        x = jnp.asarray(xs, jnp.float32)
+        a = log2_quantize(x)
+        b = log2_quantize_naive(x)
+        np.testing.assert_array_equal(np.asarray(a.exp), np.asarray(b.exp))
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(finite_f32.filter(lambda v: abs(v) > 2 ** -8),
+                    min_size=1, max_size=64))
+    def test_dequant_within_half_octave(self, xs):
+        x = jnp.asarray(xs, jnp.float32)
+        q = log2_quantize(x)
+        xh = log2_dequantize(q)
+        alive = np.asarray(q.exp) != zero_sentinel()
+        ratio = np.abs(np.asarray(xh))[alive] / np.abs(np.asarray(x))[alive]
+        # round-to-nearest exponent => ratio within [2^-0.5, 2^0.5]
+        clipped = np.asarray(q.exp)[alive] == 7
+        ok = (ratio >= 2 ** -0.51) & (ratio <= 2 ** 0.51) | clipped
+        assert ok.all()
+
+    def test_pack_unpack_codes(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(0, 1, 256),
+                        jnp.float32)
+        q = log2_quantize(x)
+        q2 = unpack_codes(pack_codes(q))
+        np.testing.assert_array_equal(np.asarray(q.exp), np.asarray(q2.exp))
+        np.testing.assert_array_equal(np.asarray(q.sign), np.asarray(q2.sign))
+
+    def test_bf16_f16_inputs(self):
+        x = np.random.default_rng(1).normal(0, 1, 128).astype(np.float32)
+        for dt in (jnp.bfloat16, jnp.float16):
+            q32 = log2_quantize(jnp.asarray(x).astype(dt).astype(jnp.float32))
+            qdt = log2_quantize(jnp.asarray(x).astype(dt))
+            np.testing.assert_array_equal(np.asarray(q32.exp),
+                                          np.asarray(qdt.exp))
+
+
+# ---------------------------------------------------------------------------
+# bit-planes (paper §IV-B)
+# ---------------------------------------------------------------------------
+
+class TestBitplanes:
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.integers(-127, 127), min_size=1, max_size=128))
+    def test_roundtrip(self, ws):
+        q = jnp.asarray(ws, jnp.int8)
+        planes = to_bitplanes(q)
+        np.testing.assert_array_equal(np.asarray(from_bitplanes(planes)),
+                                      np.asarray(q, np.int32))
+
+    def test_pack_roundtrip(self):
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.integers(-127, 128, (64, 32)), jnp.int8)
+        planes = to_bitplanes(q)
+        packed = pack_planes(planes, axis=0)
+        assert packed.shape == (8, 8, 32)
+        np.testing.assert_array_equal(np.asarray(unpack_planes(packed, axis=0)),
+                                      np.asarray(planes))
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(-127, 127), st.integers(1, 7))
+    def test_dropping_low_planes_is_arithmetic_shift(self, w, k):
+        """The paper's core identity: floor(w / 2^k) uses only planes >= k."""
+        planes = to_bitplanes(jnp.asarray([w], jnp.int8))
+        masked = planes.at[:k].set(0)
+        got = int(from_bitplanes(masked)[0]) >> k     # shift of masked value
+        assert got == w >> k
+
+
+# ---------------------------------------------------------------------------
+# shift-add matmul (paper Eq. 5): three forms agree exactly
+# ---------------------------------------------------------------------------
+
+class TestShiftAdd:
+    def _rand(self, m, k, n, seed=0, zero_frac=0.1, scale=0.5):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0, scale, (m, k)).astype(np.float32)
+        x[rng.random((m, k)) < zero_frac] = 0.0
+        q = log2_quantize(jnp.asarray(x))
+        w = quantize_weights(
+            jnp.asarray(rng.normal(0, 0.1, (k, n)).astype(np.float32)),
+            channel_axis=-1)
+        return q, w
+
+    @pytest.mark.parametrize("m,k,n", [(4, 16, 8), (3, 100, 17), (16, 64, 64)])
+    def test_bitplane_equals_elementwise(self, m, k, n):
+        q, w = self._rand(m, k, n, seed=m * k + n)
+        y0 = shiftadd_matmul_elementwise(q, w.q)
+        y1 = shiftadd_matmul_bitplane(q, to_bitplanes(w.q))
+        np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+    def test_truncation_error_bounded_per_term(self):
+        q, w = self._rand(8, 128, 16, seed=7)
+        y_t = shiftadd_matmul_elementwise(q, w.q).astype(jnp.float32)
+        y_e = shiftadd_matmul_exact(q, w.q)
+        # floor() loses < 1 per contributing term
+        assert float(jnp.max(jnp.abs(y_t - y_e))) < 128
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(-127, 127), st.integers(-8, 7))
+    def test_shift_product_semantics(self, w, e):
+        q = LogQuantized(exp=jnp.asarray([e], jnp.int8),
+                         sign=jnp.asarray([1], jnp.int8))
+        got = int(shift_product(jnp.asarray([w], jnp.int8), q)[0])
+        if e == -8:
+            assert got == 0
+        elif e >= 0:
+            assert got == w * (2 ** e)
+        else:
+            assert got == w >> (-e)
+
+    def test_quantized_linear_error(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(0, 1.0, (8, 256)).astype(np.float32)
+        w = rng.normal(0, 0.05, (256, 64)).astype(np.float32)
+        p = quantized_linear_init(jnp.asarray(w),
+                                  act_scale=calibrate_act_scale(jnp.asarray(x)))
+        y = np.asarray(quantized_linear_apply(p, jnp.asarray(x)))
+        ref = x @ w
+        rel = np.abs(y - ref).mean() / (np.abs(ref).mean() + 1e-9)
+        assert rel < 0.25        # LOG2-4bit acts x INT8 weights, no retrain
+
+
+# ---------------------------------------------------------------------------
+# memory-access model (paper Fig. 3)
+# ---------------------------------------------------------------------------
+
+class TestAccessModel:
+    def test_needed_bits(self):
+        e = jnp.asarray([-8, -7, -3, -1, 0, 3, 7], jnp.int8)
+        nb = needed_bits(e)
+        assert nb.tolist() == [0, 1, 5, 7, 8, 8, 8]
+
+    def test_all_negative_saves(self):
+        q = log2_quantize(jnp.full((1024,), 0.04, jnp.float32))  # exp ~ -5
+        rep = weight_access_report(q)
+        assert 0.3 < float(rep.savings_element) < 0.8
+        assert float(rep.savings_tile) <= float(rep.savings_element) + 1e-6
+
+    def test_positive_exponents_save_nothing(self):
+        q = log2_quantize(jnp.full((512,), 8.0, jnp.float32))
+        rep = weight_access_report(q)
+        assert float(rep.savings_element) == 0.0
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(finite_f32, min_size=8, max_size=512))
+    def test_savings_bounds(self, xs):
+        q = log2_quantize(jnp.asarray(xs, jnp.float32))
+        rep = weight_access_report(q)
+        assert -1e-6 <= float(rep.savings_element) <= 1.0
+        assert float(rep.element_bits) <= float(rep.baseline_bits)

@@ -1,0 +1,95 @@
+"""Simulator invariants + paper-number reproduction (EXPERIMENTS.md §Paper)."""
+
+import numpy as np
+import pytest
+
+from repro.simulator import (ALL_ACCELERATORS, NAHID, NEUROCUBE, QEIHAN,
+                             PAPER_WORKLOADS, gaussian_stats, paper_preset,
+                             simulate)
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for name, builder in PAPER_WORKLOADS.items():
+        layers = builder()
+        st = paper_preset(name)
+        out[name] = {c.name: simulate(c, layers, st) for c in ALL_ACCELERATORS}
+    return out
+
+
+class TestInvariants:
+    def test_qeihan_never_more_accesses_than_nahid(self, results):
+        for name, r in results.items():
+            assert r["qeihan"].dram_bits <= r["nahid"].dram_bits + 1e-6, name
+
+    def test_qeihan_faster_and_greener_than_nahid(self, results):
+        for name, r in results.items():
+            assert r["qeihan"].time_s <= r["nahid"].time_s * 1.001, name
+            assert r["qeihan"].energy_j <= r["nahid"].energy_j * 1.001, name
+
+    def test_speedup_positive_vs_neurocube(self, results):
+        for name, r in results.items():
+            assert r["neurocube"].time_s / r["qeihan"].time_s > 1.0, name
+
+    def test_energy_breakdown_sums(self, results):
+        for r in results.values():
+            for sim in r.values():
+                total = sim.energy_j
+                parts = sum(sim.energy_by().values())
+                assert abs(total - parts) / total < 1e-9
+
+    def test_dram_dominates_energy(self, results):
+        # paper Fig. 12: "the DRAM consumes most of the energy in all cases"
+        for name, r in results.items():
+            br = r["qeihan"].energy_by()
+            assert br["dram"] == max(br.values()), name
+
+
+class TestPaperNumbers:
+    """Loose bands around the paper's printed averages (§VI)."""
+
+    def test_fig3_avg_memory_savings(self):
+        savs = [paper_preset(m).estimated_memory_savings()
+                for m in PAPER_WORKLOADS]
+        assert 0.15 < float(np.mean(savs)) < 0.40      # paper: 0.25
+
+    def test_access_ratio_vs_nahid(self, results):
+        ratios = [r["qeihan"].dram_bits / r["nahid"].dram_bits
+                  for r in results.values()]
+        assert 0.6 < float(np.mean(ratios)) < 0.85     # paper: 0.75
+
+    def test_speedup_vs_nahid(self, results):
+        spd = [r["nahid"].time_s / r["qeihan"].time_s
+               for r in results.values()]
+        assert 1.2 < float(np.mean(spd)) < 1.6         # paper: 1.38
+
+    def test_ptblm_best_alexnet_worst_vs_nahid(self, results):
+        spd = {n: r["nahid"].time_s / r["qeihan"].time_s
+               for n, r in results.items()}
+        assert max(spd, key=spd.get) == "ptblm"        # paper: 1.86x best
+        assert min(spd, key=spd.get) == "alexnet"      # paper: 1.07x worst
+
+    def test_energy_vs_nahid(self, results):
+        e = [r["nahid"].energy_j / r["qeihan"].energy_j
+             for r in results.values()]
+        assert 1.1 < float(np.mean(e)) < 1.6           # paper: 1.28
+
+
+class TestStats:
+    def test_gaussian_negative_fraction_monotone(self):
+        fracs = [gaussian_stats(c, 2.0, 0.1).negative_fraction
+                 for c in (-4, -2, 0, 2)]
+        assert all(a > b for a, b in zip(fracs, fracs[1:]))
+
+    def test_presets_match_paper_negativity(self):
+        for name, target in [("ptblm", 0.98), ("bert-base", 0.82),
+                             ("bert-large", 0.85), ("transformer", 0.57),
+                             ("alexnet", 0.36)]:
+            got = paper_preset(name).negative_fraction
+            assert abs(got - target) < 0.02, (name, got)
+
+    def test_needed_bits_range(self):
+        for m in PAPER_WORKLOADS:
+            st = paper_preset(m)
+            assert 1.0 <= st.mean_needed_bits() <= 8.0

@@ -1,0 +1,131 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, watchdog."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import adamw
+from repro.train.trainer import StragglerWatchdog
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                                total_steps=200)
+        params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+        state = adamw.init(params)
+        target = jnp.asarray([1.0, 1.0, 1.0])
+
+        @jax.jit
+        def step(p, s):
+            g = jax.grad(lambda pp: jnp.sum((pp["w"] - target) ** 2))(p)
+            return adamw.update(cfg, g, s, p)
+
+        for _ in range(150):
+            params, state, metrics = step(params, state)
+        np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                                   atol=1e-2)
+        assert float(metrics["lr"]) <= cfg.lr
+
+    def test_clipping_bounds_update(self):
+        cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1e-3, warmup_steps=0,
+                                total_steps=10)
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init(params)
+        g = {"w": jnp.full(4, 1e6)}
+        new_p, _, m = adamw.update(cfg, g, state, params)
+        assert float(m["grad_norm"]) > 1e5
+        assert float(jnp.max(jnp.abs(new_p["w"]))) < 10.0
+
+    def test_schedule_shape(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+        lrs = [float(adamw.schedule(cfg, jnp.asarray(s)))
+               for s in [0, 5, 10, 50, 100]]
+        assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert lrs[4] == pytest.approx(0.1, abs=1e-6)
+
+
+class TestData:
+    def test_deterministic_across_instances(self):
+        cfg = DataConfig(global_batch=8, seq_len=32, vocab_size=1000, seed=3)
+        a = SyntheticLM(cfg).batch(11, shard=2, n_shards=4)
+        b = SyntheticLM(cfg).batch(11, shard=2, n_shards=4)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_shards_disjoint_streams(self):
+        cfg = DataConfig(global_batch=8, seq_len=64, vocab_size=50000)
+        a = SyntheticLM(cfg).batch(0, shard=0, n_shards=2)
+        b = SyntheticLM(cfg).batch(0, shard=1, n_shards=2)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = DataConfig(global_batch=2, seq_len=16, vocab_size=100)
+        batch = SyntheticLM(cfg).batch(0)
+        np.testing.assert_array_equal(batch["labels"][:, :-1],
+                                      batch["tokens"][:, 1:])
+
+    def test_bad_shard_count_raises(self):
+        cfg = DataConfig(global_batch=6, seq_len=8, vocab_size=10)
+        with pytest.raises(ValueError):
+            SyntheticLM(cfg).batch(0, shard=0, n_shards=4)
+
+
+class TestCheckpoint:
+    def _state(self, seed):
+        k = jax.random.PRNGKey(seed)
+        return {"params": {"w": jax.random.normal(k, (8, 4))},
+                "opt": {"m": jnp.zeros((8, 4)), "step": jnp.asarray(7)}}
+
+    def test_roundtrip_exact(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        st = self._state(0)
+        mgr.save(5, st, {"loss": 1.5})
+        got = mgr.restore(5, st)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert mgr.metadata(5)["loss"] == 1.5
+
+    def test_keep_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in range(1, 6):
+            mgr.save(s, self._state(s))
+        assert mgr.all_steps() == [4, 5]
+        assert mgr.latest_step() == 5
+
+    def test_async_save_and_error_surfacing(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        mgr.save_async(1, self._state(1))
+        mgr.wait()
+        assert mgr.all_steps() == [1]
+        # duplicate step -> FileExistsError surfaced on wait()
+        mgr.save_async(1, self._state(1))
+        with pytest.raises(FileExistsError):
+            mgr.wait()
+
+    def test_atomicity_no_tmp_left(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        mgr.save(3, self._state(3))
+        assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        mgr.save(1, self._state(0))
+        bad = {"params": {"w": jnp.zeros((2, 2))},
+               "opt": {"m": jnp.zeros((8, 4)), "step": jnp.asarray(0)}}
+        with pytest.raises(ValueError):
+            mgr.restore(1, bad)
+
+
+class TestWatchdog:
+    def test_flags_outlier(self):
+        wd = StragglerWatchdog(factor=3.0, warmup=3)
+        flags = [wd.observe(t) for t in [1.0, 1.1, 0.9, 1.0, 10.0, 1.0]]
+        assert flags == [False, False, False, False, True, False]
+        assert wd.flagged == 1
