@@ -1,0 +1,98 @@
+"""Decode-throughput benchmark: per-token Python loop vs the fused
+``lax.scan`` engine, float vs QeiHaN-quantized, plus the per-step
+weight-plane traffic fractions.
+
+This is the serving image of the paper's claim: the win comes from keeping
+the datapath busy (fused program, no per-token dispatch) while skipping
+weight bit-planes (quant path).  Rows print through ``benchmarks.run`` as
+``decode.<name>,<value>,``.
+
+  PYTHONPATH=src python -m benchmarks.run --only decode
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, repeats: int = 3) -> float:
+    """Best-of wall time of ``fn(*args)`` after one warmup (compile) call."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def decode_bench(arch: str = "smollm_135m", batch: int = 2,
+                 prompt_len: int = 16, new_tokens: int = 32,
+                 repeats: int = 3):
+    """Returns rows (name, value, reference-nan) for benchmarks.run."""
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.models.quantize import quantize_model_params
+    from repro.serving import engine
+
+    cfg = get_smoke(arch).replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (batch, prompt_len), 0, cfg.vocab_size)
+    key = jax.random.PRNGKey(0)
+    n = batch * new_tokens
+    nan = float("nan")
+    rows = []
+
+    # --- unfused baseline: pre-jitted steps, timed Python decode loop ------
+    from repro.models.model import init_caches
+    prefill = jax.jit(engine.make_prefill_step(cfg))
+    step = jax.jit(engine.make_serve_step(cfg, quant="xla"))
+    step_f = jax.jit(engine.make_serve_step(cfg))
+
+    def py_loop(params, prompt, step_fn):
+        caches = init_caches(cfg, batch, prompt_len + new_tokens,
+                             dtype=cfg.dtype)
+        logits, caches = prefill(params, {"tokens": prompt}, caches)
+        cur = None
+        for _ in range(new_tokens):
+            cur = jnp.argmax(logits, axis=-1)
+            logits, caches = step_fn(params, caches, cur[:, None])
+        return cur
+
+    t_loop = _time(py_loop, params, prompt, step_f, repeats=repeats)
+    rows.append((f"decode.{cfg.name}.float.loop_tok_s", n / t_loop, nan))
+
+    # --- fused scan engine -------------------------------------------------
+    fused = engine.generate_fn(cfg, new_tokens, 0.0, False, None, False)
+    t_fused = _time(fused, params, prompt, key, repeats=repeats)
+    rows.append((f"decode.{cfg.name}.float.fused_tok_s", n / t_fused, nan))
+    rows.append((f"decode.{cfg.name}.float.fused_speedup",
+                 t_loop / t_fused, nan))
+
+    # --- quantized (xla backend, so CPU timing is the bit-plane math not the
+    # pallas interpreter) ---------------------------------------------------
+    qparams = quantize_model_params(cfg, params)
+    t_qloop = _time(py_loop, qparams, prompt, step, repeats=repeats)
+    rows.append((f"decode.{cfg.name}.quant.loop_tok_s", n / t_qloop, nan))
+    # time the stats-free program — the traffic accounting adds per-
+    # projection skip-table work that the loop/float comparison points lack
+    fused_q = engine.generate_fn(cfg, new_tokens, 0.0, "xla", None, False)
+    t_qfused = _time(lambda: fused_q(qparams, prompt, key)[0],
+                     repeats=repeats)
+    rows.append((f"decode.{cfg.name}.quant.fused_tok_s", n / t_qfused, nan))
+
+    fused_q_stats = engine.generate_fn(cfg, new_tokens, 0.0, "xla", None,
+                                       True)
+    _, stats = fused_q_stats(qparams, prompt, key)
+    rows.append((f"decode.{cfg.name}.quant.plane_traffic_fraction_tile",
+                 float(jnp.mean(stats["plane_traffic_fraction"])), nan))
+    rows.append((f"decode.{cfg.name}.quant.plane_traffic_fraction_element",
+                 float(jnp.mean(stats["element_traffic_fraction"])), nan))
+    return rows
+
+
+ALL_DECODE_BENCHES = {"decode": decode_bench}

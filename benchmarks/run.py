@@ -1,8 +1,11 @@
 """Benchmark driver: one function per paper table/figure + kernel benches
-+ the roofline summary.  Prints ``name,value,reference`` CSV.
++ the decode-throughput bench + the roofline summary.  Prints
+``name,value,reference`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run --only fig9 --stats measured
+  PYTHONPATH=src python -m benchmarks.run --only decode
+  PYTHONPATH=src python -m benchmarks.run --dry       # CI smoke (fast)
 """
 
 from __future__ import annotations
@@ -15,14 +18,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig2,...,table1,"
-                         "kernels,roofline)")
+                         "kernels,decode,roofline)")
     ap.add_argument("--stats", default="preset",
                     choices=["preset", "measured", "both"])
     ap.add_argument("--roofline-dir", default="results/dryrun")
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke: import every bench registry and run a "
+                         "tiny decode bench — catches wiring/API drift "
+                         "without the full measurement cost")
     args = ap.parse_args()
 
+    from benchmarks.decode_bench import ALL_DECODE_BENCHES, decode_bench
     from benchmarks.kernel_bench import ALL_KERNEL_BENCHES
     from benchmarks.paper_figures import ALL_FIGURES
+
+    if args.dry:
+        names = (list(ALL_FIGURES) + [f"kernels.{k}" for k in
+                                      ALL_KERNEL_BENCHES]
+                 + list(ALL_DECODE_BENCHES))
+        print(f"# dry run: {len(names)} bench groups registered "
+              f"({','.join(names)})")
+        print("name,value,paper_reference")
+        for name, val, _ in decode_bench(batch=1, prompt_len=8, new_tokens=4,
+                                         repeats=1):
+            print(f"{name},{val:.4f},")
+        return
 
     only = set(args.only.split(",")) if args.only else None
 
@@ -51,6 +71,11 @@ def main() -> None:
                 d = "" if (isinstance(derived, float) and math.isnan(derived)) \
                     else f"{derived:.4g}"
                 print(f"kernels.{name},{us:.2f},{d}")
+
+    if want("decode"):
+        for key, fn in ALL_DECODE_BENCHES.items():
+            for name, val, _ in fn():
+                print(f"{name},{val:.4f},")
 
     if want("roofline"):
         import os

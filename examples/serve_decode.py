@@ -1,8 +1,16 @@
-"""Batched serving example: prefill + decode across the arch zoo, float vs
-QeiHaN-quantized weights side by side, with per-layer access accounting.
+"""Batched serving example: prefill + FUSED decode across the arch zoo,
+float vs QeiHaN-quantized weights side by side, with per-step weight-plane
+traffic reporting.
+
+The decode loop is one jitted ``lax.scan`` program (see
+``repro.serving.engine``) — per-token Python dispatch is gone.  With
+``--quant`` the serve steps run through the plane-skipping Pallas kernel
+(interpret off-TPU); ``--pack`` serves the packed bit-plane deploy format.
 
   PYTHONPATH=src python examples/serve_decode.py --arch qwen3-32b
   PYTHONPATH=src python examples/serve_decode.py --arch mamba2-780m --quant
+  PYTHONPATH=src python examples/serve_decode.py --arch smollm-135m \
+      --quant --pack --backend xla
 """
 
 import argparse
@@ -13,9 +21,31 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke, list_archs
 from repro.core import log2_quantize, weight_access_report
-from repro.models import forward, init_caches, init_params
+from repro.models import init_caches, init_params
 from repro.models.quantize import quantize_model_params
 from repro.serving import greedy_generate
+
+
+def _audio_generate(cfg, params, key, batch, new_tokens, quant):
+    """Audio stub: decode frame-by-frame from synthetic embeddings — also a
+    single ``lax.scan`` (frames are precomputed, so they stream as xs)."""
+    from repro.serving.engine import make_serve_step
+    step = make_serve_step(cfg, quant)
+    embs = jax.vmap(lambda k: jax.random.normal(
+        k, (batch, 1, cfg.d_model)))(jax.random.split(key, new_tokens))
+
+    @jax.jit
+    def run(params, embs):
+        caches = init_caches(cfg, batch, new_tokens, dtype=jnp.float32)
+
+        def body(caches, emb):
+            lg, caches = step(params, caches, emb)
+            return caches, jnp.argmax(lg, -1)
+
+        _, toks = jax.lax.scan(body, caches, embs)
+        return jnp.swapaxes(toks, 0, 1)
+
+    return run(params, embs)
 
 
 def main():
@@ -25,41 +55,47 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--quant", action="store_true")
+    ap.add_argument("--backend", default="pallas", choices=["pallas", "xla"])
+    ap.add_argument("--pack", action="store_true",
+                    help="pack bit-planes 8-to-a-byte (int8-footprint "
+                         "deploy format)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch).replace(dtype=jnp.float32)
     key = jax.random.PRNGKey(0)
     params = init_params(key, cfg)
     if args.quant:
-        params = quantize_model_params(cfg, params)
+        params = quantize_model_params(cfg, params, pack=args.pack)
+    quant = args.backend if args.quant else False
 
+    stats = None
     if cfg.frontend == "audio_stub":
-        # decode frame-by-frame from synthetic embeddings
-        caches = init_caches(cfg, args.batch, args.new_tokens,
-                             dtype=jnp.float32)
-        toks = []
         t0 = time.perf_counter()
-        for t in range(args.new_tokens):
-            emb = jax.random.normal(jax.random.fold_in(key, t),
-                                    (args.batch, 1, cfg.d_model))
-            lg, caches = forward(cfg, params, embeds=emb, caches=caches,
-                                 quant=args.quant)
-            toks.append(jnp.argmax(lg[:, -1], -1))
+        out = _audio_generate(cfg, params, key, args.batch, args.new_tokens,
+                              quant)
         dt = time.perf_counter() - t0
-        out = jnp.stack(toks, 1)
     else:
         prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                     cfg.vocab_size)
         t0 = time.perf_counter()
         out = greedy_generate(cfg, params, prompt, max_new=args.new_tokens,
-                              quant=args.quant)
+                              quant=quant, with_stats=args.quant)
+        if args.quant:
+            out, stats = out
         dt = time.perf_counter() - t0
 
     n = args.batch * args.new_tokens
-    mode = "qeihan-int8-bitplane" if args.quant else "float"
+    mode = (f"qeihan-int8-bitplane[{args.backend}"
+            f"{'+packed' if args.pack else ''}]" if args.quant else "float")
     print(f"[{cfg.name} | {mode}] {n} tokens in {dt:.2f}s "
-          f"({n / dt:.1f} tok/s on CPU)")
+          f"({n / dt:.1f} tok/s, fused decode incl. compile)")
     print("tokens[0]:", out[0].tolist())
+    if stats is not None:
+        print(f"per-step plane traffic: "
+              f"{float(jnp.mean(stats['plane_traffic_fraction'])):.3f} "
+              f"tile-granular (kernel), "
+              f"{float(jnp.mean(stats['element_traffic_fraction'])):.3f} "
+              f"element-granular (ASIC)")
 
     # what the QeiHaN memory system would have saved on this workload
     x = jax.random.normal(key, (1024, cfg.d_model)) * 0.3

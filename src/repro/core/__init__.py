@@ -7,7 +7,8 @@ from repro.core.logquant import (LogQuantized, log2_dequantize, log2_quantize,
                                  log2_quantize_naive, negative_fraction,
                                  pack_codes, pruned_fraction, unpack_codes,
                                  zero_sentinel)
-from repro.core.shiftadd import (QuantizedLinearParams, calibrate_act_scale,
+from repro.core.shiftadd import (QuantCtx, QuantizedLinearParams,
+                                 as_quant_ctx, calibrate_act_scale,
                                  quantized_linear_apply, quantized_linear_init,
                                  shift_product, shiftadd_matmul_bitplane,
                                  shiftadd_matmul_elementwise,

@@ -29,7 +29,8 @@ used by the model zoo when ``QuantConfig.mode == "qeihan"``.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import dataclasses
+from typing import List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,8 @@ __all__ = [
     "shiftadd_matmul_bitplane",
     "shiftadd_matmul_exact",
     "QuantizedLinearParams",
+    "QuantCtx",
+    "as_quant_ctx",
     "quantized_linear_init",
     "quantized_linear_apply",
     "calibrate_act_scale",
@@ -125,6 +128,47 @@ class QuantizedLinearParams(NamedTuple):
     bias: Optional[jnp.ndarray]
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class QuantCtx:
+    """Runtime configuration of the QeiHaN quant path, threaded alongside the
+    per-projection :class:`QuantizedLinearParams` down to every ``dense``.
+
+    * ``backend`` — ``"xla"`` runs :func:`shiftadd_matmul_bitplane` (8
+      unrolled {0,1}-matmuls, the portable form); ``"pallas"`` dispatches the
+      plane-skipping TPU kernel (``kernels.bitplane_matmul``), interpret mode
+      off-TPU.  Both compute the identical int32 result.
+    * ``collect`` — trace-time accumulator: when set (a plain Python list),
+      each quantized projection appends ``(tile_fetched, tile_total,
+      elem_fetched, elem_total)`` weight-traffic counts — tile-granular
+      (what the Pallas kernel's skip table actually DMAs) and
+      element-granular (the ASIC bank model, paper Fig. 7) — the traffic
+      image of the paper's §VI memory-access savings.  The list must be
+      created and consumed within one trace scope (see
+      ``models.model.forward``'s scan body).
+    """
+
+    backend: str = "xla"
+    n_bits: int = 4
+    collect: Optional[List[Tuple[jnp.ndarray, jnp.ndarray,
+                                 jnp.ndarray, jnp.ndarray]]] = None
+
+
+def as_quant_ctx(quant: Union[bool, str, QuantCtx, None],
+                 default_backend: str = "xla") -> Optional[QuantCtx]:
+    """Normalize the user-facing ``quant`` flag: False/None -> None (float
+    path), True -> ``QuantCtx(backend=default_backend)``, a backend string or
+    an explicit ``QuantCtx`` pass through."""
+    if quant is None or quant is False:
+        return None
+    if isinstance(quant, QuantCtx):
+        return quant
+    if quant is True:
+        return QuantCtx(backend=default_backend)
+    if isinstance(quant, str):
+        return QuantCtx(backend=quant)
+    raise TypeError(f"quant must be bool, str or QuantCtx, got {quant!r}")
+
+
 def calibrate_act_scale(x: jnp.ndarray, percentile: float = 99.9) -> jnp.ndarray:
     """Per-tensor activation scale: map the p99.9 magnitude to ~2^3.
 
@@ -153,12 +197,19 @@ def quantized_linear_init(w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
 
 def quantized_linear_apply(p: QuantizedLinearParams, x: jnp.ndarray,
                            n_bits: int = 4,
-                           truncated: bool = True) -> jnp.ndarray:
+                           truncated: bool = True,
+                           backend: str = "xla",
+                           collect: Optional[list] = None) -> jnp.ndarray:
     """x (..., K) -> y (..., N) through the full QeiHaN path.
 
     ``p.planes`` may be packed 8-to-a-byte along K (the HBM-resident deploy
     format: same footprint as plain INT8); unpacking happens on the fly —
     in-register on the TPU kernel, an explicit op here.
+
+    ``backend="pallas"`` runs the plane-skipping Pallas kernel instead of the
+    unrolled jnp bit-plane matmul (identical int32 result); ``collect``
+    accumulates ``(fetched, total)`` plane-tile traffic counts (see
+    :class:`QuantCtx`).
     """
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -167,8 +218,25 @@ def quantized_linear_apply(p: QuantizedLinearParams, x: jnp.ndarray,
         planes = bp.unpack_planes(planes, axis=0)
     xs = (x.astype(jnp.float32) / p.act_scale).reshape(-1, k)
     q = log2_quantize(xs, n_bits=n_bits)
+    if collect is not None:
+        from repro.core.access_model import needed_bits
+        from repro.kernels.bitplane_matmul.ops import plane_traffic_counts
+        # weight the per-GEMM fractions by the N extent so the accumulated
+        # numbers reflect actual bytes, not tile-table cells
+        n_scale = jnp.float32(planes.shape[-1])
+        tile_f, tile_t = plane_traffic_counts(q.exp, n_bits=n_bits)
+        nb = needed_bits(q.exp, n_bits=n_bits)
+        alive = (q.exp != zero_sentinel(n_bits)).astype(jnp.float32)
+        collect.append((tile_f * n_scale, tile_t * n_scale,
+                        jnp.sum(nb.astype(jnp.float32)) * n_scale,
+                        jnp.sum(alive) * 8.0 * n_scale))
     if truncated:
-        y_int = shiftadd_matmul_bitplane(q, planes, n_bits=n_bits)
+        if backend == "pallas":
+            from repro.kernels.bitplane_matmul.ops import bitplane_matmul_pallas
+            y_int = bitplane_matmul_pallas(q.exp, q.sign, planes,
+                                           n_bits=n_bits)
+        else:
+            y_int = shiftadd_matmul_bitplane(q, planes, n_bits=n_bits)
         y = y_int.astype(jnp.float32)
     else:
         w = bp.from_bitplanes(planes).astype(jnp.float32)

@@ -41,6 +41,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 WEIGHT_BITS = 8
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _bitplane_matmul_kernel(min_plane_ref,          # scalar prefetch (Mb, Kb)
                             exp_ref, sign_ref,       # (bm, bk) int8
@@ -117,7 +121,7 @@ def bitplane_matmul_kernel(exp: jnp.ndarray, sign: jnp.ndarray,
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(min_plane, exp, sign, planes)

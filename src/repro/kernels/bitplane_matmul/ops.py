@@ -62,19 +62,30 @@ def bitplane_matmul_pallas(exp: jnp.ndarray, sign: jnp.ndarray,
     return out[:m, :n]
 
 
-def plane_traffic_fraction(exp: jnp.ndarray, n_bits: int = 4,
-                           block_m: int = 128, block_k: int = 128,
-                           bits: int = WEIGHT_BITS) -> jnp.ndarray:
-    """Fraction of weight-plane tiles the kernel actually touches (0..1).
+def plane_traffic_counts(exp: jnp.ndarray, n_bits: int = 4,
+                         block_m: int = 128, block_k: int = 128,
+                         bits: int = WEIGHT_BITS):
+    """(fetched, total) weight-plane tile counts, as f32 scalars.
 
-    The denominator is all ``bits`` planes of every (m-tile, k-tile) cell —
-    i.e. what a standard int8 layout streams.  Mirrors the kernel's skip rule
-    exactly (same table).
+    ``total`` is all ``bits`` planes of every (m-tile, k-tile) cell — what a
+    standard int8 layout streams; ``fetched`` mirrors the kernel's skip rule
+    exactly (same table).  Returned as a pair so callers accumulating over
+    many projections (the serving engine's per-step stats) can weight each
+    GEMM by its tile count before taking the fraction.
     """
     m, k = exp.shape
     pm, pk = (-m) % block_m, (-k) % block_k
     sentinel = -(1 << (n_bits - 1))
     exp_p = jnp.pad(exp, ((0, pm), (0, pk)), constant_values=sentinel)
     table = _skip_table(exp_p, block_m, block_k, n_bits, bits)
-    fetched = jnp.sum(bits - table)
-    return fetched / (bits * table.size)
+    fetched = jnp.sum(bits - table).astype(jnp.float32)
+    total = jnp.asarray(bits * table.size, jnp.float32)
+    return fetched, total
+
+
+def plane_traffic_fraction(exp: jnp.ndarray, n_bits: int = 4,
+                           block_m: int = 128, block_k: int = 128,
+                           bits: int = WEIGHT_BITS) -> jnp.ndarray:
+    """Fraction of weight-plane tiles the kernel actually touches (0..1)."""
+    fetched, total = plane_traffic_counts(exp, n_bits, block_m, block_k, bits)
+    return fetched / total

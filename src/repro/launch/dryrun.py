@@ -134,7 +134,10 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             else:
                 tsh = batch_shardings(mesh, specs["token"],
                                       axes=pol.batch_axes)
-                step = make_serve_step(cfg, quant=quant)
+                # "xla" backend: the dry-run lowers under GSPMD on the 512-
+                # device placeholder mesh, which cannot partition a pallas
+                # interpret call; the bit-plane math is identical either way
+                step = make_serve_step(cfg, quant="xla" if quant else False)
                 jitted = jax.jit(step, in_shardings=(psh, csh, tsh),
                                  donate_argnums=(1,))
                 args = (pspecs, specs["caches"], specs["token"])

@@ -1,5 +1,7 @@
 """Serving driver: prefill a batch of prompts, decode new tokens, report
-tokens/s.  Mesh-aware (TP sharding of params and caches); CPU smoke:
+tokens/s.  Mesh-aware (TP sharding of params and caches); the decode phase is
+the FUSED ``lax.scan`` loop — one XLA program for all new tokens, no
+per-token dispatch.  CPU smoke:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16
@@ -17,8 +19,9 @@ from repro.configs import get_config, get_smoke
 from repro.launch.mesh import batch_axes, make_host_mesh, make_production_mesh
 from repro.launch.shardings import cache_shardings, params_shardings
 from repro.models.model import init_caches, init_params
+from repro.models.quantize import quantize_model_params
 from repro.models.sharding import mesh_axes
-from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.serving.engine import make_decode_loop, make_prefill_step
 
 
 def main(argv=None):
@@ -31,6 +34,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--quant", action="store_true")
+    ap.add_argument("--quant-backend", default="pallas",
+                    choices=["pallas", "xla"])
+    ap.add_argument("--pack", action="store_true",
+                    help="serve packed bit-planes (int8-footprint deploy "
+                         "format)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="enable while_loop early stop on this token id")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -44,9 +54,12 @@ def main(argv=None):
     bax = batch_axes(mesh)
     max_len = args.prompt_len + args.new_tokens
 
+    quant = args.quant_backend if args.quant else False
     with mesh, mesh_axes(batch=bax, model="model", seq_shard=False,
                          sizes=dict(mesh.shape), mesh=mesh):
         params = init_params(jax.random.PRNGKey(args.seed), cfg)
+        if args.quant:
+            params = quantize_model_params(cfg, params, pack=args.pack)
         psh = params_shardings(mesh, params, fsdp=False)
         params = jax.device_put(params, psh)
         caches = init_caches(cfg, args.batch, max_len, dtype=cfg.dtype)
@@ -64,30 +77,46 @@ def main(argv=None):
         else:
             batch = {"tokens": prompt}
 
-        prefill = jax.jit(make_prefill_step(cfg, args.quant),
+        prefill = jax.jit(make_prefill_step(cfg, quant),
                           donate_argnums=(2,))
-        step = jax.jit(make_serve_step(cfg, args.quant), donate_argnums=(1,))
+        decode = jax.jit(make_decode_loop(cfg, args.new_tokens, quant=quant,
+                                          eos_id=args.eos_id,
+                                          with_stats=args.quant),
+                         donate_argnums=(1,))
 
         t0 = time.perf_counter()
         logits, caches = prefill(params, batch, caches)
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
 
-        cur = jnp.argmax(logits, axis=-1)
-        toks = [cur]
         t1 = time.perf_counter()
-        for _ in range(args.new_tokens - 1):
-            logits, caches = step(params, caches, cur[:, None])
-            cur = jnp.argmax(logits, axis=-1)
-            toks.append(cur)
-        jax.block_until_ready(cur)
+        toks, stats = decode(params, caches, logits, key)
+        jax.block_until_ready(toks)
         t_decode = time.perf_counter() - t1
 
-    total_new = args.batch * args.new_tokens
+    import numpy as np
+    toks_h = np.asarray(toks)
+    if args.eos_id is None:
+        total_new = toks_h.size
+        steps = args.new_tokens
+    else:
+        # early stop: count per-row tokens up to (and including) the first
+        # EOS, and only the while_loop iterations that actually executed —
+        # trailing slots are EOS padding / zeroed stats
+        hits = toks_h == args.eos_id
+        first = np.where(hits.any(1), hits.argmax(1) + 1, args.new_tokens)
+        total_new = int(first.sum())
+        steps = int(first.max()) if args.new_tokens else 0
     print(f"[serve] {cfg.name}: prefill {args.batch}x{args.prompt_len} "
           f"in {t_prefill:.3f}s; {total_new} tokens decoded in "
-          f"{t_decode:.3f}s ({total_new / max(t_decode, 1e-9):.1f} tok/s)")
-    print("sample tokens:", jnp.stack(toks, axis=1)[0, :8].tolist())
+          f"{t_decode:.3f}s ({total_new / max(t_decode, 1e-9):.1f} tok/s, "
+          f"fused scan incl. compile)")
+    if stats is not None and steps:
+        tile = float(jnp.mean(stats["plane_traffic_fraction"][:steps]))
+        elem = float(jnp.mean(stats["element_traffic_fraction"][:steps]))
+        print(f"[serve] plane_traffic_fraction: {tile:.3f} tile-granular "
+              f"(kernel DMA), {elem:.3f} element-granular (ASIC model)")
+    print("sample tokens:", toks_h[0, :8].tolist())
 
 
 if __name__ == "__main__":

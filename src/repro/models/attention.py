@@ -212,18 +212,22 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
 
 
 def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
-              cache: Optional[KVCache] = None, quant: bool = False):
+              cache: Optional[KVCache] = None, quant=False):
     """Full GQA block body (pre-norm residual handled by caller).
 
     Returns ``(attn_out, new_cache)``.  With ``cache`` given, ``x`` is the
-    new-token slice (decode: S=1) appended at ``cache.length``.
+    new-token slice (decode: S=1) appended at ``cache.length``.  ``quant``
+    (bool | str | QuantCtx) routes QKV/O through the QeiHaN path.
     """
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
-    q = dense(p["wq"], x, p.get("bq"), p.get("wq_q") if quant else None)
-    k = dense(p["wk"], x, p.get("bk"), p.get("wk_q") if quant else None)
-    v = dense(p["wv"], x, p.get("bv"), p.get("wv_q") if quant else None)
+    q = dense(p["wq"], x, p.get("bq"), p.get("wq_q") if quant else None,
+              ctx=quant)
+    k = dense(p["wk"], x, p.get("bk"), p.get("wk_q") if quant else None,
+              ctx=quant)
+    v = dense(p["wv"], x, p.get("bv"), p.get("wv_q") if quant else None,
+              ctx=quant)
     q = q.reshape(b, s, h, hd)
     k = k.reshape(b, s, hkv, hd)
     v = v.reshape(b, s, hkv, hd)
@@ -264,5 +268,5 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
         new_cache = KVCache(k=kc, v=vc, length=new_len)
 
     out = out.reshape(b, s, h * hd)
-    y = dense(p["wo"], out, quant=p.get("wo_q") if quant else None)
+    y = dense(p["wo"], out, quant=p.get("wo_q") if quant else None, ctx=quant)
     return y, new_cache

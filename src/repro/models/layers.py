@@ -7,8 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.shiftadd import (QuantizedLinearParams, quantized_linear_apply,
-                                 quantized_linear_init)
+from repro.core.shiftadd import (QuantCtx, QuantizedLinearParams, as_quant_ctx,
+                                 quantized_linear_apply, quantized_linear_init)
 
 # ---------------------------------------------------------------------------
 # initializers
@@ -69,15 +69,21 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def dense(w, x: jnp.ndarray, bias=None,
-          quant: Optional[QuantizedLinearParams] = None) -> jnp.ndarray:
+          quant: Optional[QuantizedLinearParams] = None,
+          ctx=None) -> jnp.ndarray:
     """Projection with optional QeiHaN path.
 
     ``w``: (K, N); ``x``: (..., K).  When ``quant`` is provided the GEMM runs
     through the LOG2-activation / bit-plane-weight shift-add path (the
-    framework's first-class integration of the paper's technique).
+    framework's first-class integration of the paper's technique).  ``ctx``
+    (bool | str | QuantCtx) selects the backend ("xla" | "pallas") and
+    optionally collects plane-traffic counts; see ``core.shiftadd.QuantCtx``.
     """
     if quant is not None:
-        y = quantized_linear_apply(quant, x).astype(x.dtype)
+        qc = as_quant_ctx(ctx) or QuantCtx()
+        y = quantized_linear_apply(quant, x, n_bits=qc.n_bits,
+                                   backend=qc.backend,
+                                   collect=qc.collect).astype(x.dtype)
     else:
         y = jnp.matmul(x, w.astype(x.dtype))
     if bias is not None:
@@ -90,11 +96,17 @@ def quantize_dense(w, bias=None, act_scale: float = 1.0) -> QuantizedLinearParam
                                  act_scale=act_scale)
 
 
-def swiglu(p, x: jnp.ndarray, quant: bool = False) -> jnp.ndarray:
-    """p: {'gate': (d, ff), 'up': (d, ff), 'down': (ff, d)}."""
-    g = dense(p["gate"], x, quant=p.get("gate_q") if quant else None)
-    u = dense(p["up"], x, quant=p.get("up_q") if quant else None)
+def swiglu(p, x: jnp.ndarray, quant=False) -> jnp.ndarray:
+    """p: {'gate': (d, ff), 'up': (d, ff), 'down': (ff, d)}.
+
+    ``quant`` is the usual bool | str | QuantCtx flag (truthy enables the
+    QeiHaN path and is forwarded to ``dense`` as the backend/stats context).
+    """
+    g = dense(p["gate"], x, quant=p.get("gate_q") if quant else None,
+              ctx=quant)
+    u = dense(p["up"], x, quant=p.get("up_q") if quant else None, ctx=quant)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     from repro.models.sharding import shard
     h = shard(h, "btf")
-    return dense(p["down"], h, quant=p.get("down_q") if quant else None)
+    return dense(p["down"], h, quant=p.get("down_q") if quant else None,
+                 ctx=quant)

@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.shiftadd import as_quant_ctx
 from repro.models import moe as moe_lib
 from repro.models import ssd as ssd_lib
 from repro.models.attention import KVCache, attention
@@ -238,7 +239,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
-                 cache, cache_len, quant: bool):
+                 cache, cache_len, quant):
     base = kind.split("_")[0]
     is_moe = kind.endswith("_moe")
     x = shard(x, "btd")                     # keep the scan carry SP-sharded
@@ -276,8 +277,18 @@ def forward(cfg: ModelConfig, params: Params, *,
             image_embeds: Optional[jnp.ndarray] = None,
             positions: Optional[jnp.ndarray] = None,
             caches: Optional[Params] = None,
-            quant: bool = False):
-    """Returns (logits, new_caches). ``caches`` enables decode/prefill mode."""
+            quant=False,
+            return_stats: bool = False):
+    """Returns (logits, new_caches). ``caches`` enables decode/prefill mode.
+
+    ``quant`` (bool | str | QuantCtx) routes eligible projections through the
+    QeiHaN shift-add path.  With ``return_stats=True`` a third element is
+    returned: ``{"plane_fetched", "plane_total", "plane_traffic_fraction"}``,
+    the weight-plane HBM-traffic accounting summed over every quantized
+    projection of the call (the decode-time image of the paper's §VI
+    memory-access savings; zeros when ``quant`` is falsy).
+    """
+    ctx = as_quant_ctx(quant)
     if embeds is not None:                       # audio stub: direct embeddings
         x = embeds.astype(cfg.dtype)
     else:
@@ -297,13 +308,23 @@ def forward(cfg: ModelConfig, params: Params, *,
 
     def period_body(x, xs):
         lp, lc = xs
+        # plane-traffic accounting: the collect list is created AND consumed
+        # inside this body so its tracers never cross the scan boundary; the
+        # per-period sums stream out as scan ys
+        bctx = None if ctx is None else dataclasses.replace(
+            ctx, collect=[] if return_stats else None)
         new_cs = []
         for i, kind in enumerate(cfg.pattern):
             c_i = None if lc is None else lc[i]
             x, nc = _apply_block(cfg, kind, lp[i], x, positions, c_i,
-                                 cache_len, quant)
+                                 cache_len, bctx)
             new_cs.append(nc)
-        return x, tuple(new_cs)
+        traffic = None
+        if return_stats:
+            coll = bctx.collect if bctx is not None else []
+            zero = jnp.zeros((), jnp.float32)
+            traffic = tuple(sum((c[j] for c in coll), zero) for j in range(4))
+        return x, (tuple(new_cs), traffic)
 
     body = period_body
     if cfg.remat == "full":
@@ -315,9 +336,9 @@ def forward(cfg: ModelConfig, params: Params, *,
 
     if layer_caches is None:
         def scan_body(x, lp):
-            x, _ = body(x, (lp, None))
-            return x, None
-        x, _ = jax.lax.scan(scan_body, x, params["blocks"])
+            x, (_, traffic) = body(x, (lp, None))
+            return x, traffic
+        x, traffic = jax.lax.scan(scan_body, x, params["blocks"])
         new_caches = None
     # NB (§Perf, refuted hypothesis): carrying the stacked caches as scan
     # carry + in-place update triggers XLA copy-insertion of the FULL cache
@@ -327,7 +348,7 @@ def forward(cfg: ModelConfig, params: Params, *,
     else:
         def scan_body(x, xs):
             return body(x, xs)
-        x, new_layer_caches = jax.lax.scan(
+        x, (new_layer_caches, traffic) = jax.lax.scan(
             scan_body, x, (params["blocks"], layer_caches))
         new_caches = {"layers": new_layer_caches,
                       "length": cache_len + s}
@@ -336,7 +357,13 @@ def forward(cfg: ModelConfig, params: Params, *,
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.matmul(x, head.astype(x.dtype))
     logits = shard(logits, "btv")
-    return logits, new_caches
+    if not return_stats:
+        return logits, new_caches
+    tile_f, tile_t, el_f, el_t = (jnp.sum(t) for t in traffic)
+    stats = {"plane_fetched": tile_f, "plane_total": tile_t,
+             "plane_traffic_fraction": tile_f / jnp.maximum(tile_t, 1.0),
+             "element_traffic_fraction": el_f / jnp.maximum(el_t, 1.0)}
+    return logits, new_caches, stats
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,7 @@ the LOG2-activation / bit-plane-weight shift-add representation.
 
 ``quantize_model_params`` walks the param tree and, for every projection the
 technique applies to (DESIGN.md §Arch-applicability: attention QKV/O,
-dense/shared MLP, Mamba in/out projections, lm_head), attaches a
+dense/shared MLP, Mamba in/out projections), attaches a
 ``QuantizedLinearParams`` under ``<name>_q``.  Layers keep their float
 weights too (used for anything the quant path doesn't cover and for
 side-by-side evaluation).  Stacked (scan) leaves are quantized with vmap

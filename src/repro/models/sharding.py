@@ -141,3 +141,25 @@ def shard(x: jax.Array, kind: str) -> jax.Array:
         return jax.lax.with_sharding_constraint(x, s)
     except (ValueError, TypeError):
         return x
+
+
+def axis_size(name: str) -> int:
+    """Version-portable ``jax.lax.axis_size`` (absent before ~0.5): inside a
+    collective scope ``psum(1, name)`` constant-folds to the static size."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-portable ``shard_map``: jax >= 0.6 exposes ``jax.shard_map``
+    (``check_vma``); older releases only have the experimental module
+    (``check_rep``).  All repo call sites go through this wrapper."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -129,12 +129,14 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
     # forced GSPMD to reshard (full-tensor collective-permutes, §Perf log)
     if "in_proj" in p:                    # legacy fused layout
         zxbcdt = dense(p["in_proj"], x,
-                       quant=p.get("in_proj_q") if quant else None)
+                       quant=p.get("in_proj_q") if quant else None, ctx=quant)
         z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
         xs_r, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
     else:
-        z = dense(p["wz"], x, quant=p.get("wz_q") if quant else None)
-        xs_r = dense(p["wx"], x, quant=p.get("wx_q") if quant else None)
+        z = dense(p["wz"], x, quant=p.get("wz_q") if quant else None,
+                  ctx=quant)
+        xs_r = dense(p["wx"], x, quant=p.get("wx_q") if quant else None,
+                     ctx=quant)
         b = dense(p["wb"], x)
         c = dense(p["wc"], x)
         dt = dense(p["wdt"], x)
@@ -204,7 +206,8 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
     z = z.astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
                  p["norm"], cfg.norm_eps)
-    out = dense(p["out_proj"], y, quant=p.get("out_proj_q") if quant else None)
+    out = dense(p["out_proj"], y, quant=p.get("out_proj_q") if quant else None,
+                ctx=quant)
     if state is None:
         return out, None
     return out, new_state

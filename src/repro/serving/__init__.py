@@ -1,3 +1,5 @@
-from repro.serving.engine import (greedy_generate, make_prefill_step,
-                                  make_serve_step)
-__all__ = ["greedy_generate", "make_prefill_step", "make_serve_step"]
+from repro.serving.engine import (generate_fn, greedy_generate,
+                                  make_decode_loop, make_prefill_step,
+                                  make_serve_step, reference_generate)
+__all__ = ["generate_fn", "greedy_generate", "make_decode_loop",
+           "make_prefill_step", "make_serve_step", "reference_generate"]

@@ -1,52 +1,231 @@
-"""Serving layer: prefill + single-token decode (the dry-run ``serve_step``)
-and a batched autoregressive generate loop for the examples."""
+"""Serving layer: prefill + single-token decode steps and the FUSED
+autoregressive generation loop.
+
+The decode loop is a single XLA program — ``jax.lax.scan`` over pre-allocated
+caches (greedy/temperature sampling), or ``jax.lax.while_loop`` when an
+``eos_id`` enables early stop — so an entire generate executes with **no
+per-token host round-trips** (DESIGN.md §Serving).  The unfused per-token
+Python loop survives only as :func:`reference_generate`, the semantics oracle
+for tests and the dispatch-overhead baseline for benchmarks.
+
+Quantized serving is wired end-to-end: ``make_serve_step(quant=True)``
+resolves to the **Pallas** bit-plane backend (``bitplane_matmul_pallas``,
+interpret mode off-TPU), accepts packed planes from
+``quantize_model_params(pack=True)``, and — with ``with_stats=True`` —
+reports the per-step ``plane_traffic_fraction`` (the fraction of weight-plane
+tiles the kernel actually fetches: the decode-time image of the paper's §VI
+memory-access savings).
+"""
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.shiftadd import QuantCtx, as_quant_ctx
 from repro.models.model import ModelConfig, forward, init_caches
 
+QuantFlag = Union[bool, str, QuantCtx]
 
-def make_prefill_step(cfg: ModelConfig, quant: bool = False):
+
+def make_prefill_step(cfg: ModelConfig, quant: QuantFlag = False):
     """(params, batch) -> (last-token logits, caches).
 
     Runs the full forward over the prompt while writing the KV/SSM caches.
-    This is what the ``prefill_32k`` shape lowers.
+    This is what the ``prefill_32k`` shape lowers.  ``quant=True`` resolves
+    to the portable "xla" bit-plane backend (prefill GEMMs are MXU-shaped
+    already; the plane-skip kernel targets the decode hot path).
     """
+    ctx = as_quant_ctx(quant, default_backend="xla")
+
     def prefill_step(params, batch, caches):
         logits, caches = forward(
             cfg, params,
             tokens=batch.get("tokens"), embeds=batch.get("embeds"),
             image_embeds=batch.get("image_embeds"),
-            caches=caches, quant=quant)
+            caches=caches, quant=ctx)
         return logits[:, -1], caches
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, quant: bool = False):
-    """(params, caches, token) -> (logits, caches): ONE new token against a
-    pre-filled cache.  This is what ``decode_32k`` / ``long_500k`` lower."""
+def make_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
+                    with_stats: bool = False):
+    """(params, caches, token) -> (logits, caches[, stats]): ONE new token
+    against a pre-filled cache.  This is what ``decode_32k`` / ``long_500k``
+    lower.
+
+    ``quant=True`` resolves to the **"pallas"** backend: eligible projections
+    run through ``bitplane_matmul_pallas`` (interpret mode off-TPU); pass
+    ``quant="xla"`` for the pure-jnp bit-plane form.  ``with_stats=True``
+    appends the plane-traffic stats dict (see ``models.model.forward``).
+    """
+    ctx = as_quant_ctx(quant, default_backend="pallas")
+
     def serve_step(params, caches, token):
         if cfg.frontend == "audio_stub":
             # audio stub decodes from a frame embedding, not a token id
-            logits, caches = forward(cfg, params, embeds=token, caches=caches,
-                                     quant=quant)
+            out = forward(cfg, params, embeds=token, caches=caches,
+                          quant=ctx, return_stats=with_stats)
         else:
-            logits, caches = forward(cfg, params, tokens=token, caches=caches,
-                                     quant=quant)
+            out = forward(cfg, params, tokens=token, caches=caches,
+                          quant=ctx, return_stats=with_stats)
+        if with_stats:
+            logits, caches, stats = out
+            return logits[:, -1], caches, stats
+        logits, caches = out
         return logits[:, -1], caches
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# fused decode loop
+# ---------------------------------------------------------------------------
+
+def make_decode_loop(cfg: ModelConfig, max_new: int, *,
+                     temperature: float = 0.0,
+                     quant: QuantFlag = False,
+                     eos_id: Optional[int] = None,
+                     with_stats: bool = False):
+    """Build ``decode(params, caches, logits, key) -> (tokens, fracs)``.
+
+    ``caches`` must be pre-filled and ``logits`` is the last-prompt-token
+    distribution (i.e. the prefill outputs).  The returned function is a
+    single jittable program: a ``lax.scan`` over ``max_new`` steps, or — when
+    ``eos_id`` is given — a ``lax.while_loop`` that exits as soon as every
+    row has emitted ``eos_id`` (remaining slots are ``eos_id``-padded).
+
+    Returns ``tokens`` (B, max_new) int32 and ``stats`` — when
+    ``with_stats``, a dict of per-step (max_new,) arrays:
+    ``plane_traffic_fraction`` (tile-granular, what the Pallas kernel's skip
+    table actually fetches) and ``element_traffic_fraction`` (the ASIC bank
+    model, the paper's Fig. 3/§VI number) — else ``None``.
+    """
+    step = make_serve_step(cfg, quant, with_stats=with_stats)
+    greedy = temperature <= 0.0
+
+    def sample(logits, key):
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def do_step(params, caches, tok):
+        out = step(params, caches, tok[:, None])
+        if with_stats:
+            logits, caches, stats = out
+            frac = jnp.stack([stats["plane_traffic_fraction"],
+                              stats["element_traffic_fraction"]])
+            return logits, caches, frac
+        logits, caches = out
+        return logits, caches, jnp.zeros((2,), jnp.float32)
+
+    def decode(params, caches, logits, key):
+        b = logits.shape[0]
+
+        if eos_id is None:
+            def body(carry, _):
+                lg, cs, k = carry
+                k, sub = jax.random.split(k)
+                tok = sample(lg, sub)
+                lg, cs, frac = do_step(params, cs, tok)
+                return (lg, cs, k), (tok, frac)
+
+            _, (toks, fracs) = jax.lax.scan(
+                body, (logits, caches, key), None, length=max_new)
+            toks = jnp.swapaxes(toks, 0, 1)               # (T, B) -> (B, T)
+        else:
+            def cond(carry):
+                i, done = carry[0], carry[1]
+                return (i < max_new) & ~jnp.all(done)
+
+            def body(carry):
+                i, done, lg, cs, k, toks, fracs = carry
+                k, sub = jax.random.split(k)
+                tok = jnp.where(done, eos_id, sample(lg, sub))
+                toks = jax.lax.dynamic_update_slice_in_dim(
+                    toks, tok[:, None], i, axis=1)
+                done = done | (tok == eos_id)
+                lg, cs, frac = do_step(params, cs, tok)
+                fracs = jax.lax.dynamic_update_slice_in_dim(
+                    fracs, frac[None], i, axis=0)
+                return (i + 1, done, lg, cs, k, toks, fracs)
+
+            init = (jnp.zeros((), jnp.int32), jnp.zeros((b,), bool),
+                    logits, caches, key,
+                    jnp.full((b, max_new), eos_id, jnp.int32),
+                    jnp.zeros((max_new, 2), jnp.float32))
+            (_, _, _, _, _, toks, fracs) = jax.lax.while_loop(cond, body, init)
+
+        if not with_stats:
+            return toks, None
+        return toks, {"plane_traffic_fraction": fracs[:, 0],
+                      "element_traffic_fraction": fracs[:, 1]}
+    return decode
+
+
+@functools.lru_cache(maxsize=64)
+def generate_fn(cfg: ModelConfig, max_new: int, temperature: float,
+                quant: QuantFlag, eos_id: Optional[int], with_stats: bool):
+    """One jitted (prefill + fused decode) program per static configuration.
+
+    The lru_cache keeps the jit wrapper (and therefore its compilation cache)
+    alive across calls — repeated generates with the same shapes compile
+    exactly once.
+    """
+    prefill = make_prefill_step(cfg, quant)
+    decode = make_decode_loop(cfg, max_new, temperature=temperature,
+                              quant=quant, eos_id=eos_id,
+                              with_stats=with_stats)
+
+    def generate(params, prompt, key):
+        b, s = prompt.shape
+        caches = init_caches(cfg, b, max_len=s + max_new, dtype=cfg.dtype)
+        logits, caches = prefill(params, {"tokens": prompt}, caches)
+        return decode(params, caches, logits, key)
+
+    return jax.jit(generate)
 
 
 def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
                     max_new: int, *, temperature: float = 0.0,
                     key: Optional[jax.Array] = None,
-                    quant: bool = False) -> jnp.ndarray:
-    """Batched autoregressive generation (example/demo path)."""
+                    quant: QuantFlag = False,
+                    eos_id: Optional[int] = None,
+                    with_stats: bool = False):
+    """Batched autoregressive generation as ONE fused XLA program.
+
+    Token-for-token equivalent to the historical per-token Python loop
+    (:func:`reference_generate`, property-tested), but prefill + every decode
+    step compile into a single program: no per-token dispatch, no host
+    round-trips.  Returns tokens (B, max_new); with ``with_stats=True``
+    returns ``(tokens, stats)`` where stats holds the per-step
+    ``plane_traffic_fraction`` / ``element_traffic_fraction`` arrays.
+    """
+    if not isinstance(quant, (bool, str)):
+        raise TypeError("greedy_generate takes quant as bool|str; build a "
+                        "custom loop via make_decode_loop for a QuantCtx")
+    fn = generate_fn(cfg, int(max_new), float(temperature), quant,
+                      eos_id if eos_id is None else int(eos_id),
+                      bool(with_stats))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    toks, fracs = fn(params, prompt, key)
+    return (toks, fracs) if with_stats else toks
+
+
+def reference_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
+                       max_new: int, *, temperature: float = 0.0,
+                       key: Optional[jax.Array] = None,
+                       quant: QuantFlag = False) -> jnp.ndarray:
+    """The unfused per-token Python loop (the pre-fused-engine semantics).
+
+    Kept as the oracle for ``tests/test_serving_fused.py`` and the
+    dispatch-overhead baseline for ``benchmarks/decode_bench.py`` — do NOT
+    use for serving.
+    """
     b, s = prompt.shape
     caches = init_caches(cfg, b, max_len=s + max_new, dtype=cfg.dtype)
     prefill = jax.jit(make_prefill_step(cfg, quant))
@@ -54,13 +233,13 @@ def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
     logits, caches = prefill(params, {"tokens": prompt}, caches)
 
     toks = []
-    cur = None
-    for i in range(max_new):
+    for _ in range(max_new):
         if temperature > 0.0:
             key, sub = jax.random.split(key)
             cur = jax.random.categorical(sub, logits / temperature, axis=-1)
         else:
             cur = jnp.argmax(logits, axis=-1)
+        cur = cur.astype(jnp.int32)
         toks.append(cur)
         logits, caches = step(params, caches, cur[:, None])
     return jnp.stack(toks, axis=1)

@@ -36,7 +36,8 @@ def pipeline_forward(stage_fn: Callable, params_stacked, x_micro,
     ``x_micro``: (n_micro, mb, ...) — meaningful on stage 0.
     Returns (n_micro, mb, ...) outputs — meaningful on the last stage.
     """
-    n_stages = jax.lax.axis_size(axis)
+    from repro.models.sharding import axis_size
+    n_stages = axis_size(axis)
     stage = jax.lax.axis_index(axis)
     n_micro = x_micro.shape[0]
     total_ticks = n_micro + n_stages - 1

@@ -1,10 +1,25 @@
-"""Unit + property tests for the QeiHaN core quantization math."""
+"""Unit + property tests for the QeiHaN core quantization math.
+
+Property tests use ``hypothesis`` when it is installed (see
+``requirements-dev.txt``); without it the same invariants run over
+deterministic seeded sweeps, so ``python -m pytest`` stays green on a bare
+``jax + pytest`` environment.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed (deterministic "
+                                "fallback cases cover the same invariants)")
 
 from repro.core import (calibrate_act_scale, from_bitplanes, log2_dequantize,
                         log2_quantize, log2_quantize_naive, needed_bits,
@@ -16,13 +31,49 @@ from repro.core import (calibrate_act_scale, from_bitplanes, log2_dequantize,
                         weight_access_report, zero_sentinel)
 from repro.core.logquant import LogQuantized
 
-finite_f32 = st.floats(min_value=-1e4, max_value=1e4, width=32,
-                       allow_nan=False, allow_infinity=False)
+if HAVE_HYPOTHESIS:
+    finite_f32 = st.floats(min_value=-1e4, max_value=1e4, width=32,
+                           allow_nan=False, allow_infinity=False)
+
+
+def _seeded_float_batches(n_batches=20, max_size=64):
+    """Deterministic stand-in for the hypothesis float-list strategy: mixed
+    magnitudes (1e-6..1e3), zeros and sign flips, seeded."""
+    rng = np.random.default_rng(1234)
+    out = []
+    for i in range(n_batches):
+        size = int(rng.integers(1, max_size + 1))
+        mag = rng.choice([1e-6, 1e-3, 0.1, 1.0, 30.0, 1e3], size)
+        x = (rng.normal(0, 1.0, size) * mag).astype(np.float32)
+        x[rng.random(size) < 0.1] = 0.0
+        out.append(x)
+    return out
 
 
 # ---------------------------------------------------------------------------
 # LOG2 quantization (paper Eqs. 2-4, Fig. 5)
 # ---------------------------------------------------------------------------
+
+def _check_comparator_matches_naive(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    a = log2_quantize(x)
+    b = log2_quantize_naive(x)
+    np.testing.assert_array_equal(np.asarray(a.exp), np.asarray(b.exp))
+
+
+def _check_dequant_within_half_octave(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q = log2_quantize(x)
+    xh = log2_dequantize(q)
+    alive = np.asarray(q.exp) != zero_sentinel()
+    if not alive.any():
+        return
+    ratio = np.abs(np.asarray(xh))[alive] / np.abs(np.asarray(x))[alive]
+    # round-to-nearest exponent => ratio within [2^-0.5, 2^0.5]
+    clipped = np.asarray(q.exp)[alive] == 7
+    ok = (ratio >= 2 ** -0.51) & (ratio <= 2 ** 0.51) | clipped
+    assert ok.all()
+
 
 class TestLog2Quant:
     def test_exact_powers_of_two(self):
@@ -58,27 +109,30 @@ class TestLog2Quant:
         q = log2_quantize(jnp.asarray([lo, hi]))
         assert q.exp[0] == 0 and q.exp[1] == 1
 
-    @settings(max_examples=300, deadline=None)
-    @given(st.lists(finite_f32, min_size=1, max_size=64))
-    def test_comparator_matches_naive(self, xs):
-        x = jnp.asarray(xs, jnp.float32)
-        a = log2_quantize(x)
-        b = log2_quantize_naive(x)
-        np.testing.assert_array_equal(np.asarray(a.exp), np.asarray(b.exp))
+    @needs_hypothesis
+    def test_comparator_matches_naive_property(self):
+        @settings(max_examples=300, deadline=None)
+        @given(st.lists(finite_f32, min_size=1, max_size=64))
+        def run(xs):
+            _check_comparator_matches_naive(xs)
+        run()
 
-    @settings(max_examples=200, deadline=None)
-    @given(st.lists(finite_f32.filter(lambda v: abs(v) > 2 ** -8),
-                    min_size=1, max_size=64))
-    def test_dequant_within_half_octave(self, xs):
-        x = jnp.asarray(xs, jnp.float32)
-        q = log2_quantize(x)
-        xh = log2_dequantize(q)
-        alive = np.asarray(q.exp) != zero_sentinel()
-        ratio = np.abs(np.asarray(xh))[alive] / np.abs(np.asarray(x))[alive]
-        # round-to-nearest exponent => ratio within [2^-0.5, 2^0.5]
-        clipped = np.asarray(q.exp)[alive] == 7
-        ok = (ratio >= 2 ** -0.51) & (ratio <= 2 ** 0.51) | clipped
-        assert ok.all()
+    def test_comparator_matches_naive_seeded(self):
+        for xs in _seeded_float_batches():
+            _check_comparator_matches_naive(xs)
+
+    @needs_hypothesis
+    def test_dequant_within_half_octave_property(self):
+        @settings(max_examples=200, deadline=None)
+        @given(st.lists(finite_f32.filter(lambda v: abs(v) > 2 ** -8),
+                        min_size=1, max_size=64))
+        def run(xs):
+            _check_dequant_within_half_octave(xs)
+        run()
+
+    def test_dequant_within_half_octave_seeded(self):
+        for xs in _seeded_float_batches():
+            _check_dequant_within_half_octave(xs)
 
     def test_pack_unpack_codes(self):
         x = jnp.asarray(np.random.default_rng(0).normal(0, 1, 256),
@@ -101,14 +155,36 @@ class TestLog2Quant:
 # bit-planes (paper §IV-B)
 # ---------------------------------------------------------------------------
 
+def _check_roundtrip(ws):
+    q = jnp.asarray(ws, jnp.int8)
+    planes = to_bitplanes(q)
+    np.testing.assert_array_equal(np.asarray(from_bitplanes(planes)),
+                                  np.asarray(q, np.int32))
+
+
+def _check_dropping_low_planes_is_shift(w, k):
+    """The paper's core identity: floor(w / 2^k) uses only planes >= k."""
+    planes = to_bitplanes(jnp.asarray([w], jnp.int8))
+    masked = planes.at[:k].set(0)
+    got = int(from_bitplanes(masked)[0]) >> k         # shift of masked value
+    assert got == w >> k
+
+
 class TestBitplanes:
-    @settings(max_examples=100, deadline=None)
-    @given(st.lists(st.integers(-127, 127), min_size=1, max_size=128))
-    def test_roundtrip(self, ws):
-        q = jnp.asarray(ws, jnp.int8)
-        planes = to_bitplanes(q)
-        np.testing.assert_array_equal(np.asarray(from_bitplanes(planes)),
-                                      np.asarray(q, np.int32))
+    @needs_hypothesis
+    def test_roundtrip_property(self):
+        @settings(max_examples=100, deadline=None)
+        @given(st.lists(st.integers(-127, 127), min_size=1, max_size=128))
+        def run(ws):
+            _check_roundtrip(ws)
+        run()
+
+    def test_roundtrip_seeded(self):
+        rng = np.random.default_rng(5)
+        for _ in range(10):
+            _check_roundtrip(rng.integers(-127, 128,
+                                          rng.integers(1, 129)).tolist())
+        _check_roundtrip(list(range(-127, 128)))      # exhaustive int8 range
 
     def test_pack_roundtrip(self):
         rng = np.random.default_rng(2)
@@ -119,19 +195,35 @@ class TestBitplanes:
         np.testing.assert_array_equal(np.asarray(unpack_planes(packed, axis=0)),
                                       np.asarray(planes))
 
-    @settings(max_examples=100, deadline=None)
-    @given(st.integers(-127, 127), st.integers(1, 7))
-    def test_dropping_low_planes_is_arithmetic_shift(self, w, k):
-        """The paper's core identity: floor(w / 2^k) uses only planes >= k."""
-        planes = to_bitplanes(jnp.asarray([w], jnp.int8))
-        masked = planes.at[:k].set(0)
-        got = int(from_bitplanes(masked)[0]) >> k     # shift of masked value
-        assert got == w >> k
+    @needs_hypothesis
+    def test_dropping_low_planes_property(self):
+        @settings(max_examples=100, deadline=None)
+        @given(st.integers(-127, 127), st.integers(1, 7))
+        def run(w, k):
+            _check_dropping_low_planes_is_shift(w, k)
+        run()
+
+    def test_dropping_low_planes_exhaustive(self):
+        for w in range(-127, 128):
+            for k in range(1, 8):
+                _check_dropping_low_planes_is_shift(w, k)
 
 
 # ---------------------------------------------------------------------------
 # shift-add matmul (paper Eq. 5): three forms agree exactly
 # ---------------------------------------------------------------------------
+
+def _check_shift_product(w, e):
+    q = LogQuantized(exp=jnp.asarray([e], jnp.int8),
+                     sign=jnp.asarray([1], jnp.int8))
+    got = int(shift_product(jnp.asarray([w], jnp.int8), q)[0])
+    if e == -8:
+        assert got == 0
+    elif e >= 0:
+        assert got == w * (2 ** e)
+    else:
+        assert got == w >> (-e)
+
 
 class TestShiftAdd:
     def _rand(self, m, k, n, seed=0, zero_frac=0.1, scale=0.5):
@@ -158,18 +250,18 @@ class TestShiftAdd:
         # floor() loses < 1 per contributing term
         assert float(jnp.max(jnp.abs(y_t - y_e))) < 128
 
-    @settings(max_examples=50, deadline=None)
-    @given(st.integers(-127, 127), st.integers(-8, 7))
-    def test_shift_product_semantics(self, w, e):
-        q = LogQuantized(exp=jnp.asarray([e], jnp.int8),
-                         sign=jnp.asarray([1], jnp.int8))
-        got = int(shift_product(jnp.asarray([w], jnp.int8), q)[0])
-        if e == -8:
-            assert got == 0
-        elif e >= 0:
-            assert got == w * (2 ** e)
-        else:
-            assert got == w >> (-e)
+    @needs_hypothesis
+    def test_shift_product_property(self):
+        @settings(max_examples=50, deadline=None)
+        @given(st.integers(-127, 127), st.integers(-8, 7))
+        def run(w, e):
+            _check_shift_product(w, e)
+        run()
+
+    def test_shift_product_exhaustive(self):
+        for w in (-127, -64, -3, -1, 0, 1, 3, 64, 127):
+            for e in range(-8, 8):
+                _check_shift_product(w, e)
 
     def test_quantized_linear_error(self):
         rng = np.random.default_rng(3)
@@ -182,10 +274,28 @@ class TestShiftAdd:
         rel = np.abs(y - ref).mean() / (np.abs(ref).mean() + 1e-9)
         assert rel < 0.25        # LOG2-4bit acts x INT8 weights, no retrain
 
+    def test_backends_agree_exactly(self):
+        """The pallas kernel (interpret off-TPU) and the jnp bit-plane form
+        compute the identical int32 result through the layer API."""
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.normal(0, 0.5, (4, 96)).astype(np.float32))
+        w = jnp.asarray(rng.normal(0, 0.05, (96, 40)).astype(np.float32))
+        p = quantized_linear_init(w)
+        y_xla = quantized_linear_apply(p, x, backend="xla")
+        y_pl = quantized_linear_apply(p, x, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(y_xla), np.asarray(y_pl))
+
 
 # ---------------------------------------------------------------------------
 # memory-access model (paper Fig. 3)
 # ---------------------------------------------------------------------------
+
+def _check_savings_bounds(xs):
+    q = log2_quantize(jnp.asarray(xs, jnp.float32))
+    rep = weight_access_report(q)
+    assert -1e-6 <= float(rep.savings_element) <= 1.0
+    assert float(rep.element_bits) <= float(rep.baseline_bits)
+
 
 class TestAccessModel:
     def test_needed_bits(self):
@@ -204,10 +314,15 @@ class TestAccessModel:
         rep = weight_access_report(q)
         assert float(rep.savings_element) == 0.0
 
-    @settings(max_examples=50, deadline=None)
-    @given(st.lists(finite_f32, min_size=8, max_size=512))
-    def test_savings_bounds(self, xs):
-        q = log2_quantize(jnp.asarray(xs, jnp.float32))
-        rep = weight_access_report(q)
-        assert -1e-6 <= float(rep.savings_element) <= 1.0
-        assert float(rep.element_bits) <= float(rep.baseline_bits)
+    @needs_hypothesis
+    def test_savings_bounds_property(self):
+        @settings(max_examples=50, deadline=None)
+        @given(st.lists(finite_f32, min_size=8, max_size=512))
+        def run(xs):
+            _check_savings_bounds(xs)
+        run()
+
+    def test_savings_bounds_seeded(self):
+        for xs in _seeded_float_batches():
+            if len(xs) >= 8:
+                _check_savings_bounds(xs)

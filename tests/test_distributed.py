@@ -116,6 +116,7 @@ class TestShardedTraining:
         from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.optim.compress import compressed_psum_mean
+        from repro.models.sharding import shard_map
 
         mesh = jax.make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
@@ -124,8 +125,8 @@ class TestShardedTraining:
             red, err = compressed_psum_mean({"g": gl}, "data")
             return red["g"], err["g"]
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                           out_specs=(P(), P("data")), check_vma=False)
+        fn = shard_map(body, mesh=mesh, in_specs=P("data"),
+                       out_specs=(P(), P("data")), check_vma=False)
         red, err = fn(g)
         true_mean = jnp.mean(g.reshape(8, 1, 64), axis=0)
         rel = float(jnp.max(jnp.abs(red[0] - true_mean)) /
