@@ -88,10 +88,15 @@ def decode_bench(arch: str = "smollm_135m", batch: int = 2,
     fused_q_stats = engine.generate_fn(cfg, new_tokens, 0.0, "xla", None,
                                        True)
     _, stats = fused_q_stats(qparams, prompt, key)
+    # average executed forwards only — the final token's forward is skipped
+    # (dead logits) and reports an exact-zero stats row
+    import numpy as np
+    tile = np.asarray(stats["plane_traffic_fraction"])
+    elem = np.asarray(stats["element_traffic_fraction"])
     rows.append((f"decode.{cfg.name}.quant.plane_traffic_fraction_tile",
-                 float(jnp.mean(stats["plane_traffic_fraction"])), nan))
+                 float(tile[tile > 0].mean()), nan))
     rows.append((f"decode.{cfg.name}.quant.plane_traffic_fraction_element",
-                 float(jnp.mean(stats["element_traffic_fraction"])), nan))
+                 float(elem[tile > 0].mean()), nan))
     return rows
 
 

@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (fig2,...,table1,"
-                         "kernels,decode,roofline)")
+                         "kernels,decode,serve,roofline)")
     ap.add_argument("--stats", default="preset",
                     choices=["preset", "measured", "both"])
     ap.add_argument("--roofline-dir", default="results/dryrun")
@@ -31,11 +31,13 @@ def main() -> None:
     from benchmarks.decode_bench import ALL_DECODE_BENCHES, decode_bench
     from benchmarks.kernel_bench import ALL_KERNEL_BENCHES
     from benchmarks.paper_figures import ALL_FIGURES
+    from benchmarks.serve_bench import ALL_SERVE_BENCHES
 
     if args.dry:
         names = (list(ALL_FIGURES) + [f"kernels.{k}" for k in
                                       ALL_KERNEL_BENCHES]
-                 + list(ALL_DECODE_BENCHES))
+                 + list(ALL_DECODE_BENCHES)
+                 + list(ALL_SERVE_BENCHES))
         print(f"# dry run: {len(names)} bench groups registered "
               f"({','.join(names)})")
         print("name,value,paper_reference")
@@ -74,6 +76,11 @@ def main() -> None:
 
     if want("decode"):
         for key, fn in ALL_DECODE_BENCHES.items():
+            for name, val, _ in fn():
+                print(f"{name},{val:.4f},")
+
+    if want("serve"):
+        for key, fn in ALL_SERVE_BENCHES.items():
             for name, val, _ in fn():
                 print(f"{name},{val:.4f},")
 

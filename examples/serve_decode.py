@@ -91,10 +91,13 @@ def main():
           f"({n / dt:.1f} tok/s, fused decode incl. compile)")
     print("tokens[0]:", out[0].tolist())
     if stats is not None:
-        print(f"per-step plane traffic: "
-              f"{float(jnp.mean(stats['plane_traffic_fraction'])):.3f} "
-              f"tile-granular (kernel), "
-              f"{float(jnp.mean(stats['element_traffic_fraction'])):.3f} "
+        import numpy as np
+        # executed forwards only (the terminal step is skipped, stats row 0)
+        tile = np.asarray(stats["plane_traffic_fraction"])
+        elem = np.asarray(stats["element_traffic_fraction"])
+        ran = tile > 0
+        print(f"per-step plane traffic: {float(tile[ran].mean()):.3f} "
+              f"tile-granular (kernel), {float(elem[ran].mean()):.3f} "
               f"element-granular (ASIC)")
 
     # what the QeiHaN memory system would have saved on this workload

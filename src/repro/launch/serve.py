@@ -5,6 +5,14 @@ per-token dispatch.  CPU smoke:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --batch 4 --prompt-len 32 --new-tokens 16
+
+``--continuous`` switches to the continuous-batching slot scheduler
+(``serving/scheduler.py``): a queued trace of variable-length prompts is
+admitted into a persistent slot pool, stepped in fused multi-token ticks,
+and retired/re-filled on EOS or length — decode never drains:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+      --continuous --requests 16 --max-slots 4 --new-tokens 16 --quant
 """
 
 from __future__ import annotations
@@ -22,6 +30,44 @@ from repro.models.model import init_caches, init_params
 from repro.models.quantize import quantize_model_params
 from repro.models.sharding import mesh_axes
 from repro.serving.engine import make_decode_loop, make_prefill_step
+
+
+def _serve_continuous(cfg, params, args):
+    """Queued-trace continuous batching: submit everything, drain, report
+    sustained tok/s + per-request plane traffic."""
+    import numpy as np
+
+    from repro.serving.scheduler import ServeScheduler
+
+    quant = args.quant_backend if args.quant else False
+    buckets = tuple(sorted({8, 16, max(8, args.prompt_len)}))
+    sched = ServeScheduler(
+        cfg, params, max_slots=args.max_slots,
+        max_len=max(buckets) + args.new_tokens + args.tick_steps,
+        buckets=buckets, quant=quant, with_stats=args.quant,
+        tick_steps=args.tick_steps)
+    rng = np.random.default_rng(args.seed)
+    for _ in range(args.requests):
+        n = int(rng.integers(2, args.prompt_len + 1))
+        sched.submit(rng.integers(0, cfg.vocab_size, size=n),
+                     max_new=args.new_tokens, eos_id=args.eos_id)
+    t0 = time.perf_counter()
+    results = sched.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.tokens) for r in results)
+    print(f"[serve] {cfg.name}: continuous batching — {len(results)} "
+          f"requests, {sched.max_slots} slots, tick={sched.tick_steps}: "
+          f"{total} tokens in {dt:.3f}s ({total / max(dt, 1e-9):.1f} tok/s "
+          f"incl. compile); programs: {sched.compile_stats()}")
+    if not results:
+        return
+    if args.quant:
+        tile = float(np.mean([r.plane_traffic_fraction for r in results]))
+        elem = float(np.mean([r.element_traffic_fraction for r in results]))
+        print(f"[serve] per-request plane_traffic_fraction: {tile:.3f} "
+              f"tile-granular, {elem:.3f} element-granular")
+    r0 = results[0]
+    print(f"sample request 0 ({r0.finish_reason}):", r0.tokens[:8])
 
 
 def main(argv=None):
@@ -42,6 +88,13 @@ def main(argv=None):
     ap.add_argument("--eos-id", type=int, default=None,
                     help="enable while_loop early stop on this token id")
     ap.add_argument("--seed", type=int, default=0)
+    # continuous-batching mode
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a queued request trace through the slot "
+                         "scheduler instead of one rectangular batch")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--tick-steps", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -62,6 +115,8 @@ def main(argv=None):
             params = quantize_model_params(cfg, params, pack=args.pack)
         psh = params_shardings(mesh, params, fsdp=False)
         params = jax.device_put(params, psh)
+        if args.continuous:
+            return _serve_continuous(cfg, params, args)
         caches = init_caches(cfg, args.batch, max_len, dtype=cfg.dtype)
         csh = cache_shardings(mesh, caches, batch=args.batch)
         caches = jax.device_put(caches, csh)
@@ -112,8 +167,14 @@ def main(argv=None):
           f"{t_decode:.3f}s ({total_new / max(t_decode, 1e-9):.1f} tok/s, "
           f"fused scan incl. compile)")
     if stats is not None and steps:
-        tile = float(jnp.mean(stats["plane_traffic_fraction"][:steps]))
-        elem = float(jnp.mean(stats["element_traffic_fraction"][:steps]))
+        # average over executed forwards only: the terminal while_loop
+        # iteration no longer steps the model (its logits were dead) and
+        # reports exact-zero traffic for that slot
+        tile_all = np.asarray(stats["plane_traffic_fraction"][:steps])
+        ran = tile_all > 0
+        tile = float(tile_all[ran].mean()) if ran.any() else 0.0
+        elem_all = np.asarray(stats["element_traffic_fraction"][:steps])
+        elem = float(elem_all[ran].mean()) if ran.any() else 0.0
         print(f"[serve] plane_traffic_fraction: {tile:.3f} tile-granular "
               f"(kernel DMA), {elem:.3f} element-granular (ASIC model)")
     print("sample tokens:", toks_h[0, :8].tolist())

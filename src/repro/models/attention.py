@@ -246,10 +246,19 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
         new_cache = None
     else:
         idx = cache.length
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache.k, k.astype(cache.k.dtype), idx, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache.v, v.astype(cache.v.dtype), idx, axis=1)
+        if getattr(idx, "ndim", 0):
+            # per-slot (B,) lengths: each row appends at its own offset —
+            # vmapped dynamic-update keeps the write in-place per row
+            row_upd = jax.vmap(
+                lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, n, i, axis=0))
+            kc = row_upd(cache.k, k.astype(cache.k.dtype), idx)
+            vc = row_upd(cache.v, v.astype(cache.v.dtype), idx)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), idx, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), idx, axis=1)
         kc = shard(kc, "cache")
         vc = shard(vc, "cache")
         new_len = idx + s

@@ -214,8 +214,14 @@ def init_params(key, cfg: ModelConfig) -> Params:
 # ---------------------------------------------------------------------------
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                dtype=None) -> Params:
-    """Stacked (over repeats) per-period-position cache trees."""
+                dtype=None, per_slot: bool = False) -> Params:
+    """Stacked (over repeats) per-period-position cache trees.
+
+    ``per_slot=True`` makes ``length`` a ``(batch,)`` vector — one valid
+    length per batch row — which is what the continuous-batching slot pool
+    needs (``serving/scheduler.py``): every cache consumer accepts either the
+    scalar or the per-row form.
+    """
     if dtype is None:
         dtype = cfg.cache_dtype or cfg.dtype
     layers = []
@@ -231,7 +237,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
             c = {"ssm": jnp.broadcast_to(st.ssm, (cfg.repeats,) + st.ssm.shape),
                  "conv": jnp.broadcast_to(st.conv, (cfg.repeats,) + st.conv.shape)}
         layers.append(c)
-    return {"layers": tuple(layers), "length": jnp.zeros((), jnp.int32)}
+    length = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+    return {"layers": tuple(layers), "length": length}
 
 
 # ---------------------------------------------------------------------------
@@ -239,7 +246,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
-                 cache, cache_len, quant):
+                 cache, cache_len, quant, valid_len=None):
     base = kind.split("_")[0]
     is_moe = kind.endswith("_moe")
     x = shard(x, "btd")                     # keep the scan carry SP-sharded
@@ -252,7 +259,8 @@ def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
     else:
         st = None if cache is None else ssd_lib.SSMState(
             ssm=cache["ssm"], conv=cache["conv"])
-        out, new_st = ssd_lib.mamba2_block(p, h, cfg, state=st, quant=quant)
+        out, new_st = ssd_lib.mamba2_block(p, h, cfg, state=st, quant=quant,
+                                           valid_len=valid_len)
         new_cache = None if new_st is None else {
             "ssm": new_st.ssm, "conv": new_st.conv}
     # hint the projection output to the residual sharding *before* the add so
@@ -278,7 +286,8 @@ def forward(cfg: ModelConfig, params: Params, *,
             positions: Optional[jnp.ndarray] = None,
             caches: Optional[Params] = None,
             quant=False,
-            return_stats: bool = False):
+            return_stats: bool = False,
+            valid_len: Optional[jnp.ndarray] = None):
     """Returns (logits, new_caches). ``caches`` enables decode/prefill mode.
 
     ``quant`` (bool | str | QuantCtx) routes eligible projections through the
@@ -287,6 +296,14 @@ def forward(cfg: ModelConfig, params: Params, *,
     the weight-plane HBM-traffic accounting summed over every quantized
     projection of the call (the decode-time image of the paper's §VI
     memory-access savings; zeros when ``quant`` is falsy).
+
+    ``caches["length"]`` may be a scalar (whole-batch, the classic path) or a
+    ``(B,)`` vector (per-slot lengths, continuous batching): positions, KV
+    writes and attention masking all honor the per-row form.  ``valid_len``
+    (``(B,)``, bucketed prefill only) marks rows ``>= valid_len[b]`` of the
+    input as right-padding: SSM state/conv updates are masked so pad tokens
+    neither decay nor feed the recurrent state (attention needs no mask —
+    pads sit at causal positions after every real token).
     """
     ctx = as_quant_ctx(quant)
     if embeds is not None:                       # audio stub: direct embeddings
@@ -299,8 +316,11 @@ def forward(cfg: ModelConfig, params: Params, *,
     b, s, _ = x.shape
     if positions is None:
         base = caches["length"] if caches is not None else 0
-        positions = base + jnp.broadcast_to(
-            jnp.arange(s, dtype=jnp.int32), (b, s))
+        if getattr(base, "ndim", 0):                 # per-slot (B,) lengths
+            positions = base[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+        else:
+            positions = base + jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32), (b, s))
     x = shard(x, "btd")
     cache_len = caches["length"] if caches is not None else None
 
@@ -317,7 +337,7 @@ def forward(cfg: ModelConfig, params: Params, *,
         for i, kind in enumerate(cfg.pattern):
             c_i = None if lc is None else lc[i]
             x, nc = _apply_block(cfg, kind, lp[i], x, positions, c_i,
-                                 cache_len, bctx)
+                                 cache_len, bctx, valid_len=valid_len)
             new_cs.append(nc)
         traffic = None
         if return_stats:

@@ -116,9 +116,27 @@ def mamba2_init_state(batch: int, cfg, dtype=jnp.float32) -> SSMState:
     )
 
 
+def _window_at(window: jnp.ndarray, valid_len: jnp.ndarray,
+               width: int) -> jnp.ndarray:
+    """Per-row rolling conv state from a (B, W-1+S, C) window whose first
+    W-1 rows are the incoming state and the rest the raw projections of a
+    right-padded step: row ``b`` keeps rows ``valid_len[b] .. +W-2`` — the
+    last W-1 *real* inputs (``dynamic_slice`` clamps in-range by
+    construction since ``valid_len <= S``)."""
+    return jax.vmap(
+        lambda w, l: jax.lax.dynamic_slice_in_dim(w, l, width - 1, axis=0)
+    )(window, valid_len)
+
+
 def mamba2_block(p, x: jnp.ndarray, cfg,
-                 state: Optional[SSMState] = None, quant: bool = False):
-    """x: (B, S, d_model) -> (y, new_state).  Decode when ``state`` given."""
+                 state: Optional[SSMState] = None, quant: bool = False,
+                 valid_len: Optional[jnp.ndarray] = None):
+    """x: (B, S, d_model) -> (y, new_state).  Decode when ``state`` given.
+
+    ``valid_len`` (B,) masks right-padding (bucketed prefill): pad tokens get
+    ``dt = 0`` — decay ``exp(0) = 1`` and input contribution ``x * dt = 0``,
+    so the recurrent state passes through them untouched — and the rolling
+    conv window is sliced per row at the real-token boundary."""
     bsz, s, _ = x.shape
     h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     d_inner = h * pdim
@@ -141,6 +159,9 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
         c = dense(p["wc"], x)
         dt = dense(p["wdt"], x)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    if valid_len is not None:
+        pad = jnp.arange(s, dtype=jnp.int32)[None, :] >= valid_len[:, None]
+        dt = jnp.where(pad[..., None], 0.0, dt)
     a_log = -jnp.exp(p["a_log"].astype(jnp.float32))              # (H,) negative
 
     if state is None:
@@ -160,7 +181,10 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
         for i in range(width):
             xbc_f += window[:, i:i + s].astype(jnp.float32) * w[i]
         xbc = (xbc_f + bias.astype(jnp.float32)).astype(x.dtype)
-        new_conv = window[:, s:s + cfg.conv_width - 1]
+        if valid_len is None:
+            new_conv = window[:, s:s + cfg.conv_width - 1]
+        else:
+            new_conv = _window_at(window, valid_len, cfg.conv_width)
         xs_r, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
 
     xs = jax.nn.silu(xs_r.astype(jnp.float32)).astype(x.dtype)

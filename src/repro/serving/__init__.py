@@ -1,5 +1,12 @@
-from repro.serving.engine import (generate_fn, greedy_generate,
-                                  make_decode_loop, make_prefill_step,
-                                  make_serve_step, reference_generate)
-__all__ = ["generate_fn", "greedy_generate", "make_decode_loop",
-           "make_prefill_step", "make_serve_step", "reference_generate"]
+from repro.serving.engine import (clear_generate_cache, generate_fn,
+                                  greedy_generate, make_decode_loop,
+                                  make_prefill_step, make_serve_step,
+                                  make_slot_prefill, make_slot_serve_step,
+                                  reference_generate, set_generate_cache_size)
+from repro.serving.scheduler import (Request, RequestResult, ServeScheduler,
+                                     bucket_for)
+__all__ = ["clear_generate_cache", "generate_fn", "greedy_generate",
+           "make_decode_loop", "make_prefill_step", "make_serve_step",
+           "make_slot_prefill", "make_slot_serve_step", "reference_generate",
+           "set_generate_cache_size", "Request", "RequestResult",
+           "ServeScheduler", "bucket_for"]

@@ -19,8 +19,8 @@ memory-access savings).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Union
+import collections
+from typing import Any, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +80,64 @@ def make_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
     return serve_step
 
 
+def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
+                         with_stats: bool = False):
+    """``(params, caches, tokens (B, 1), active (B,)) -> (logits, caches
+    [, stats])``: the slot-pool decode step for continuous batching
+    (``serving/scheduler.py``).
+
+    The batch shape is the fixed slot pool, so *every* row computes each
+    step; ``active`` masks the bookkeeping — an inactive (free / retired)
+    slot's cache ``length`` does not advance, so whatever junk it decodes
+    leaves no trace once the slot is re-admitted (admission overwrites the
+    whole slot).  ``caches["length"]`` must be the per-slot ``(B,)`` form
+    (``init_caches(per_slot=True)``).  With ``with_stats=True`` the returned
+    stats dict is the batch-aggregate plane traffic of the step — the
+    scheduler attributes it to the requests active at that step.
+    """
+    ctx = as_quant_ctx(quant, default_backend="pallas")
+
+    def slot_step(params, caches, tokens, active):
+        out = forward(cfg, params, tokens=tokens, caches=caches,
+                      quant=ctx, return_stats=with_stats)
+        if with_stats:
+            logits, new_caches, stats = out
+        else:
+            logits, new_caches = out
+        new_caches = dict(new_caches)
+        new_caches["length"] = jnp.where(active, new_caches["length"],
+                                         caches["length"])
+        if with_stats:
+            return logits[:, -1], new_caches, stats
+        return logits[:, -1], new_caches
+    return slot_step
+
+
+def make_slot_prefill(cfg: ModelConfig, quant: QuantFlag = False):
+    """``(params, prompt (B, bucket), true_len (B,), caches) -> (last-real
+    logits (B, V), caches)``: bucketed prefill for slot admission.
+
+    ``prompt`` is right-padded to the bucket length; ``valid_len`` masking
+    keeps pad tokens out of the SSM state (attention needs no mask — pads sit
+    causally after every real token, and their junk K/V rows are both hidden
+    by ``kv_valid_len`` and progressively overwritten by decode writes).  The
+    returned logits are gathered at each row's last *real* token and the
+    cache ``length`` is the per-row true length, not the bucket.
+    """
+    ctx = as_quant_ctx(quant, default_backend="xla")
+
+    def prefill(params, prompt, true_len, caches):
+        logits, caches = forward(cfg, params, tokens=prompt, caches=caches,
+                                 quant=ctx, valid_len=true_len)
+        b, _, v = logits.shape
+        idx = jnp.broadcast_to((true_len - 1)[:, None, None], (b, 1, v))
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        caches = dict(caches)
+        caches["length"] = true_len
+        return last, caches
+    return prefill
+
+
 # ---------------------------------------------------------------------------
 # fused decode loop
 # ---------------------------------------------------------------------------
@@ -101,7 +159,10 @@ def make_decode_loop(cfg: ModelConfig, max_new: int, *,
     ``with_stats``, a dict of per-step (max_new,) arrays:
     ``plane_traffic_fraction`` (tile-granular, what the Pallas kernel's skip
     table actually fetches) and ``element_traffic_fraction`` (the ASIC bank
-    model, the paper's Fig. 3/§VI number) — else ``None``.
+    model, the paper's Fig. 3/§VI number) — else ``None``.  Entry ``i`` is
+    the traffic of the forward that *consumed* token ``i``; steps whose
+    logits would be dead (the final sampled token, rows all-EOS) are skipped
+    entirely — no model forward runs — and report exact zero.
     """
     step = make_serve_step(cfg, quant, with_stats=with_stats)
     greedy = temperature <= 0.0
@@ -126,15 +187,22 @@ def make_decode_loop(cfg: ModelConfig, max_new: int, *,
         b = logits.shape[0]
 
         if eos_id is None:
-            def body(carry, _):
+            def body(carry, i):
                 lg, cs, k = carry
                 k, sub = jax.random.split(k)
                 tok = sample(lg, sub)
-                lg, cs, frac = do_step(params, cs, tok)
+                # the last sampled token's forward would be dead (its logits
+                # are never sampled) — skip it, same as the eos branch below;
+                # skipped steps report exact-zero traffic stats
+                lg, cs, frac = jax.lax.cond(
+                    i + 1 < max_new,
+                    lambda cs_: do_step(params, cs_, tok),
+                    lambda cs_: (lg, cs_, jnp.zeros((2,), jnp.float32)),
+                    cs)
                 return (lg, cs, k), (tok, frac)
 
             _, (toks, fracs) = jax.lax.scan(
-                body, (logits, caches, key), None, length=max_new)
+                body, (logits, caches, key), jnp.arange(max_new))
             toks = jnp.swapaxes(toks, 0, 1)               # (T, B) -> (B, T)
         else:
             def cond(carry):
@@ -148,7 +216,17 @@ def make_decode_loop(cfg: ModelConfig, max_new: int, *,
                 toks = jax.lax.dynamic_update_slice_in_dim(
                     toks, tok[:, None], i, axis=1)
                 done = done | (tok == eos_id)
-                lg, cs, frac = do_step(params, cs, tok)
+                # step the model only if another token will be sampled from
+                # its logits: the iteration that fills slot max_new-1 (or
+                # completes every row) used to burn one dead forward — a full
+                # wasted model step per generate.  Skipped steps leave
+                # zeroed traffic stats (they fetched nothing).
+                need_step = (i + 1 < max_new) & ~jnp.all(done)
+                lg, cs, frac = jax.lax.cond(
+                    need_step,
+                    lambda cs_: do_step(params, cs_, tok),
+                    lambda cs_: (lg, cs_, jnp.zeros((2,), jnp.float32)),
+                    cs)
                 fracs = jax.lax.dynamic_update_slice_in_dim(
                     fracs, frac[None], i, axis=0)
                 return (i + 1, done, lg, cs, k, toks, fracs)
@@ -166,15 +244,9 @@ def make_decode_loop(cfg: ModelConfig, max_new: int, *,
     return decode
 
 
-@functools.lru_cache(maxsize=64)
-def generate_fn(cfg: ModelConfig, max_new: int, temperature: float,
-                quant: QuantFlag, eos_id: Optional[int], with_stats: bool):
-    """One jitted (prefill + fused decode) program per static configuration.
-
-    The lru_cache keeps the jit wrapper (and therefore its compilation cache)
-    alive across calls — repeated generates with the same shapes compile
-    exactly once.
-    """
+def _build_generate(cfg: ModelConfig, max_new: int, temperature: float,
+                    quant: QuantFlag, eos_id: Optional[int],
+                    with_stats: bool):
     prefill = make_prefill_step(cfg, quant)
     decode = make_decode_loop(cfg, max_new, temperature=temperature,
                               quant=quant, eos_id=eos_id,
@@ -187,6 +259,69 @@ def generate_fn(cfg: ModelConfig, max_new: int, temperature: float,
         return decode(params, caches, logits, key)
 
     return jax.jit(generate)
+
+
+class _GenerateFnCache:
+    """LRU of jitted (prefill + fused decode) programs, one per static
+    configuration — repeated generates with the same shapes compile exactly
+    once.
+
+    Unlike the old ``functools.lru_cache(maxsize=64)`` this bound is
+    *adjustable*: under multi-config serving (many (cfg, max_new, quant)
+    variants live at once) a fixed 64 silently evicts jitted programs that
+    are still in rotation, forcing recompiles — the scheduler sizes it
+    explicitly via :func:`set_generate_cache_size`.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self._data: "collections.OrderedDict[Tuple, Any]" = \
+            collections.OrderedDict()
+        self._maxsize = maxsize
+
+    def __call__(self, cfg: ModelConfig, max_new: int, temperature: float,
+                 quant: QuantFlag, eos_id: Optional[int], with_stats: bool):
+        key = (cfg, max_new, temperature, quant, eos_id, with_stats)
+        fn = self._data.get(key)
+        if fn is None:
+            fn = self._data[key] = _build_generate(
+                cfg, max_new, temperature, quant, eos_id, with_stats)
+        self._data.move_to_end(key)
+        while len(self._data) > self._maxsize:
+            self._data.popitem(last=False)
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    @property
+    def maxsize(self) -> int:
+        return self._maxsize
+
+    def set_maxsize(self, maxsize: int) -> None:
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self._maxsize = maxsize
+        while len(self._data) > self._maxsize:
+            self._data.popitem(last=False)
+
+    def cache_clear(self) -> None:
+        self._data.clear()
+
+
+generate_fn = _GenerateFnCache()
+
+
+def clear_generate_cache() -> None:
+    """Drop every cached jitted generate program (frees their compilation
+    caches; the next generate per configuration recompiles)."""
+    generate_fn.cache_clear()
+
+
+def set_generate_cache_size(maxsize: int) -> None:
+    """Bound the generate-program LRU explicitly — callers that know their
+    live configuration count (the serve scheduler) size it so no in-rotation
+    program is ever evicted."""
+    generate_fn.set_maxsize(maxsize)
 
 
 def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
@@ -226,6 +361,10 @@ def reference_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
     dispatch-overhead baseline for ``benchmarks/decode_bench.py`` — do NOT
     use for serving.
     """
+    if key is None:
+        # same default as greedy_generate — temperature > 0 with no key used
+        # to crash in jax.random.split(None)
+        key = jax.random.PRNGKey(0)
     b, s = prompt.shape
     caches = init_caches(cfg, b, max_len=s + max_new, dtype=cfg.dtype)
     prefill = jax.jit(make_prefill_step(cfg, quant))

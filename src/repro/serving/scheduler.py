@@ -1,0 +1,326 @@
+"""Continuous-batching serve scheduler over a persistent slot-based cache
+pool.
+
+The fused decode engine (``serving/engine.py``) runs one rectangular batch
+per compiled program — fine for offline eval, wrong for serving: a finished
+row idles its slot until the whole batch drains, and every generate
+re-allocates its caches.  This module keeps the quantized decode path
+*saturated* under sustained multi-request load, the bandwidth-bound regime
+where QeiHaN's plane-skipping pays (PAPER §VI; DESIGN.md §Scheduler):
+
+* **Slot pool** — ONE persistent allocation: ``max_slots`` cache rows of
+  ``max_len`` each (``init_caches(per_slot=True)``, per-row ``length``).
+  Slots are reset by *overwriting*, never re-allocated.
+* **Bucketed prefill** — prompts are right-padded to the smallest
+  configured bucket, so prefill compiles once per bucket, not once per
+  prompt length.  Pad tokens are masked out of the SSM state
+  (``valid_len``) and sit causally after every real token for attention.
+* **Tick loop** — ONE jitted program steps *all* slots ``tick_steps``
+  greedy tokens at a time (a ``lax.scan`` over ``make_slot_serve_step``);
+  host logic between ticks detects EOS / length exhaustion, retires the
+  slot and immediately re-fills it from the queue — decode never drains to
+  refill the batch.
+* **Per-request traffic stats** — with ``with_stats=True`` each tick
+  reports the per-step batch-aggregate ``plane_traffic_fraction`` /
+  ``element_traffic_fraction``; the scheduler attributes each step's
+  fractions to the requests active at that step and reports the per-request
+  mean.
+
+Token outputs are exactly the per-request ``greedy_generate`` outputs
+(property-tested): same prefill math (padding contributes exact zeros),
+same masked decode attention, same greedy sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ModelConfig, init_caches
+from repro.serving import engine
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
+
+
+def bucket_for(length: int, buckets: Sequence[int]) -> int:
+    """Smallest configured bucket that holds ``length`` real tokens."""
+    for b in sorted(buckets):
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds the largest prefill "
+                     f"bucket {max(buckets)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (L,) int32 token ids
+    max_new: int
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: List[int]
+    finish_reason: str                  # "eos" | "length"
+    admitted_tick: int
+    finished_tick: int
+    # per-request mean of the per-step batch-aggregate traffic fractions
+    # over the steps this request was active (nan without stats)
+    plane_traffic_fraction: float = float("nan")
+    element_traffic_fraction: float = float("nan")
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    admitted_tick: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_reason: str = ""
+    frac_sums: List[float] = dataclasses.field(
+        default_factory=lambda: [0.0, 0.0])
+    frac_steps: int = 0
+
+
+class ServeScheduler:
+    """Continuous-batching scheduler: admit -> tick -> retire -> re-fill.
+
+    Greedy decoding only (per-request temperatures would break the shared
+    batched argmax; the fused single-batch engine covers sampling).  Audio /
+    vision frontends are out of scope — they prefill from embeddings, not
+    token ids.
+
+    Usage::
+
+        sched = ServeScheduler(cfg, params, max_slots=8, max_len=256)
+        for p in prompts:
+            sched.submit(p, max_new=32, eos_id=2)
+        results = sched.run()          # List[RequestResult], rid order
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 max_slots: int = 8,
+                 max_len: int = 256,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 quant: engine.QuantFlag = False,
+                 with_stats: bool = False,
+                 tick_steps: int = 8,
+                 generate_cache_size: Optional[int] = None):
+        if cfg.frontend != "none":
+            raise ValueError("ServeScheduler serves token-id models only "
+                             f"(frontend={cfg.frontend!r})")
+        if max_slots < 1 or tick_steps < 1:
+            raise ValueError("max_slots and tick_steps must be >= 1")
+        buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if not buckets or buckets[-1] > max_len:
+            raise ValueError(f"buckets {buckets} must be non-empty and fit "
+                             f"max_len={max_len}")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.buckets = buckets
+        self.quant = quant
+        self.with_stats = with_stats
+        self.tick_steps = tick_steps
+
+        # the generate-program LRU serves the per-request parity / baseline
+        # path (greedy_generate): size it so one program per (bucket x
+        # float/quant x eos on/off) variant fits without evicting anything.
+        # NB the LRU is process-global: the default sizing only ever GROWS
+        # it; pass an explicit generate_cache_size only if this scheduler is
+        # the sole greedy_generate consumer in the process (shrinking evicts
+        # other callers' live programs).
+        if generate_cache_size is None:
+            generate_cache_size = max(engine.generate_fn.maxsize,
+                                      4 * len(buckets) + 16)
+        engine.set_generate_cache_size(generate_cache_size)
+
+        # --- persistent pool (allocated exactly once) ----------------------
+        self._pool = init_caches(cfg, max_slots, max_len, dtype=cfg.dtype,
+                                 per_slot=True)
+        self._logits = jnp.zeros((max_slots, cfg.vocab_size), cfg.dtype)
+        self._active = np.zeros((max_slots,), bool)
+        self._slots: List[Optional[_Slot]] = [None] * max_slots
+
+        self._queue: Deque[Request] = deque()
+        self._results: Dict[int, RequestResult] = {}
+        self._next_rid = 0
+        self._tick_count = 0
+
+        # --- compiled programs --------------------------------------------
+        # prefill: ONE jit wrapper; it retraces per *bucket* shape only —
+        # the compiled-program count is bounded by len(buckets)
+        slot_prefill = engine.make_slot_prefill(cfg, quant)
+
+        def prefill(params, prompt, true_len):
+            caches = init_caches(cfg, 1, max_len, dtype=cfg.dtype)
+            return slot_prefill(params, prompt, true_len, caches)
+
+        self._prefill = jax.jit(prefill)
+
+        # slot write: shape-independent of the bucket -> exactly one program
+        def write_slot(pool, slot_cache, pool_logits, slot_logits, i):
+            layers = jax.tree.map(
+                lambda p, s: jax.lax.dynamic_update_slice_in_dim(
+                    p, s.astype(p.dtype), i, axis=1),
+                pool["layers"], slot_cache["layers"])
+            length = jax.lax.dynamic_update_slice_in_dim(
+                pool["length"], slot_cache["length"].astype(jnp.int32),
+                i, axis=0)
+            logits = jax.lax.dynamic_update_slice_in_dim(
+                pool_logits, slot_logits.astype(pool_logits.dtype),
+                i, axis=0)
+            return {"layers": layers, "length": length}, logits
+
+        self._write = jax.jit(write_slot, donate_argnums=(0, 2))
+
+        # tick: scan tick_steps slot-masked greedy steps -> one program
+        step = engine.make_slot_serve_step(cfg, quant, with_stats=with_stats)
+
+        def tick(params, pool, logits, active):
+            def body(carry, _):
+                lg, cs = carry
+                tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                out = step(params, cs, tok[:, None], active)
+                if with_stats:
+                    lg, cs, stats = out
+                    frac = jnp.stack([stats["plane_traffic_fraction"],
+                                      stats["element_traffic_fraction"]])
+                else:
+                    lg, cs = out
+                    frac = jnp.zeros((2,), jnp.float32)
+                return (lg, cs), (tok, frac)
+
+            (lg, cs), (toks, fracs) = jax.lax.scan(
+                body, (logits, pool), None, length=tick_steps)
+            return lg, cs, jnp.swapaxes(toks, 0, 1), fracs
+
+        self._tick = jax.jit(tick, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt, max_new: int, eos_id: Optional[int] = None) -> int:
+        """Queue one request; returns its rid (results come back in rid
+        order from :meth:`run`)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        bucket_for(prompt.size, self.buckets)        # validates prompt fits
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds the "
+                f"slot capacity max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, prompt=prompt, max_new=max_new,
+                                   eos_id=eos_id))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + int(self._active.sum())
+
+    def compile_stats(self) -> Dict[str, int]:
+        """Compiled-program counts — the bucket bound made observable.
+
+        ``_cache_size`` is a private jax API (present on the pinned
+        jax 0.4.37); report -1 per program if a future jax drops it rather
+        than crash the serve loop."""
+        def size(fn) -> int:
+            probe = getattr(fn, "_cache_size", None)
+            return int(probe()) if callable(probe) else -1
+        return {"prefill": size(self._prefill),
+                "tick": size(self._tick),
+                "write_slot": size(self._write)}
+
+    def step_tick(self) -> bool:
+        """Admit into every free slot, run one fused multi-step tick, retire
+        finished requests.  Returns False when there is nothing to do."""
+        for i in range(self.max_slots):
+            if not self._active[i] and self._queue:
+                self._admit(i, self._queue.popleft())
+        if not self._active.any():
+            return False
+
+        lg, pool, toks, fracs = self._tick(
+            self.params, self._pool, self._logits,
+            jnp.asarray(self._active))
+        self._logits, self._pool = lg, pool
+        toks_h = np.asarray(toks)                    # (max_slots, tick_steps)
+        fracs_h = np.asarray(fracs)                  # (tick_steps, 2)
+
+        for t in range(self.tick_steps):
+            for i, slot in enumerate(self._slots):
+                if slot is None or slot.done:
+                    continue
+                tok = int(toks_h[i, t])
+                slot.tokens.append(tok)
+                if self.with_stats:
+                    slot.frac_sums[0] += float(fracs_h[t, 0])
+                    slot.frac_sums[1] += float(fracs_h[t, 1])
+                    slot.frac_steps += 1
+                if slot.req.eos_id is not None and tok == slot.req.eos_id:
+                    slot.done, slot.finish_reason = True, "eos"
+                elif len(slot.tokens) >= slot.req.max_new:
+                    slot.done, slot.finish_reason = True, "length"
+
+        self._tick_count += 1
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.done:
+                self._retire(i)
+        return True
+
+    def run(self, max_ticks: Optional[int] = None) -> List[RequestResult]:
+        """Drive ticks until queue and slots drain (or ``max_ticks``);
+        returns every finished result in rid order."""
+        ticks = 0
+        while self.pending and (max_ticks is None or ticks < max_ticks):
+            if not self.step_tick():
+                break
+            ticks += 1
+        return [self._results[rid] for rid in sorted(self._results)]
+
+    # ------------------------------------------------------------ internals
+
+    def _admit(self, slot_idx: int, req: Request) -> None:
+        length = int(req.prompt.size)
+        bucket = bucket_for(length, self.buckets)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :length] = req.prompt
+        logits1, cache1 = self._prefill(self.params, jnp.asarray(padded),
+                                        jnp.asarray([length], jnp.int32))
+        self._pool, self._logits = self._write(
+            self._pool, cache1, self._logits, logits1,
+            jnp.asarray(slot_idx, jnp.int32))
+        self._active[slot_idx] = True
+        self._slots[slot_idx] = _Slot(req=req,
+                                      admitted_tick=self._tick_count)
+
+    def _retire(self, slot_idx: int) -> None:
+        slot = self._slots[slot_idx]
+        n = max(slot.frac_steps, 1)
+        self._results[slot.req.rid] = RequestResult(
+            rid=slot.req.rid,
+            prompt_len=int(slot.req.prompt.size),
+            tokens=list(slot.tokens),
+            finish_reason=slot.finish_reason,
+            admitted_tick=slot.admitted_tick,
+            finished_tick=self._tick_count,
+            plane_traffic_fraction=(slot.frac_sums[0] / n
+                                    if self.with_stats else float("nan")),
+            element_traffic_fraction=(slot.frac_sums[1] / n
+                                      if self.with_stats else float("nan")),
+        )
+        self._active[slot_idx] = False
+        self._slots[slot_idx] = None

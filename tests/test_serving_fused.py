@@ -75,6 +75,99 @@ def test_eos_while_loop_early_stop(setup):
         assert (toks[r, j:] == eos).all() or not hits.size
 
 
+def test_reference_generate_default_key_sampling(setup):
+    """Regression: temperature > 0 with key=None used to crash in
+    jax.random.split(None); it now defaults the key like greedy_generate —
+    so the two must still agree token-for-token."""
+    cfg, params, prompt = setup
+    a = engine.reference_generate(cfg, params, prompt, max_new=4,
+                                  temperature=0.8)
+    b = engine.greedy_generate(cfg, params, prompt, max_new=4,
+                               temperature=0.8)
+    c = engine.reference_generate(cfg, params, prompt, max_new=4,
+                                  temperature=0.8,
+                                  key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_eos_terminal_step_skips_dead_forward(qsetup):
+    """Regression: the while_loop body used to run one extra model forward
+    after the final accepted token (a dead forward per generate).  Executed
+    forwards are observable through the traffic stats — every real forward
+    on the quant path fetches planes (fraction > 0), a skipped one reports
+    exactly 0 — so the step count must be first_eos.max(), not +1."""
+    cfg, qparams, prompt = qsetup
+    base = np.asarray(engine.greedy_generate(cfg, qparams, prompt, max_new=6,
+                                             quant="xla"))
+    eos = int(base[0, 2])
+    toks, stats = engine.greedy_generate(cfg, qparams, prompt, max_new=6,
+                                         quant="xla", eos_id=eos,
+                                         with_stats=True)
+    toks = np.asarray(toks)
+    frac = np.asarray(stats["plane_traffic_fraction"])
+    hits = toks == eos
+    first = np.where(hits.any(1), hits.argmax(1), toks.shape[1] - 1)
+    n_forwards = int(first.max())       # tokens 0..max-1 consumed, no more
+    assert (frac[:n_forwards] > 0).all(), frac
+    assert (frac[n_forwards:] == 0).all(), frac
+
+
+def test_eos_with_temperature_sampling_and_stats(qsetup):
+    """eos early-stop x temperature sampling x with_stats together (only
+    greedy eos was exercised before): rows match the eos-free sampled run up
+    to (and including) their first EOS, pad with EOS after, and the stats
+    arrays stay per-step shaped with zeros exactly on skipped steps."""
+    cfg, qparams, prompt = qsetup
+    key = jax.random.PRNGKey(3)
+    max_new = 6
+    base = np.asarray(engine.greedy_generate(
+        cfg, qparams, prompt, max_new=max_new, temperature=0.8, key=key,
+        quant="xla"))
+    eos = int(base[1, 1])
+    toks, stats = engine.greedy_generate(
+        cfg, qparams, prompt, max_new=max_new, temperature=0.8, key=key,
+        quant="xla", eos_id=eos, with_stats=True)
+    toks = np.asarray(toks)
+    frac = np.asarray(stats["plane_traffic_fraction"])
+    elem = np.asarray(stats["element_traffic_fraction"])
+    assert frac.shape == (max_new,) and elem.shape == (max_new,)
+    for r in range(base.shape[0]):
+        hits = np.nonzero(base[r] == eos)[0]
+        j = int(hits[0]) if hits.size else base.shape[1] - 1
+        np.testing.assert_array_equal(toks[r, :j + 1], base[r, :j + 1])
+        assert (toks[r, j:] == eos).all() or not hits.size
+    hits = toks == eos
+    first = np.where(hits.any(1), hits.argmax(1), toks.shape[1] - 1)
+    n_forwards = int(first.max())
+    assert (frac[:n_forwards] > 0).all() and (frac[n_forwards:] == 0).all()
+    assert (elem[:n_forwards] > 0).all() and (elem[n_forwards:] == 0).all()
+
+
+def test_generate_cache_clear_and_resize(setup):
+    """The generate-program LRU is explicitly controllable: clear empties
+    it, set_generate_cache_size bounds it (evicting oldest-first)."""
+    cfg, params, prompt = setup
+    old_size = engine.generate_fn.maxsize
+    try:
+        engine.clear_generate_cache()
+        assert len(engine.generate_fn) == 0
+        engine.greedy_generate(cfg, params, prompt, max_new=2)
+        engine.greedy_generate(cfg, params, prompt, max_new=3)
+        assert len(engine.generate_fn) == 2
+        engine.set_generate_cache_size(1)
+        assert len(engine.generate_fn) == 1
+        assert engine.generate_fn.maxsize == 1
+        # the survivor is the most recent entry: re-requesting it is a hit
+        fn = engine.generate_fn(cfg, 3, 0.0, False, None, False)
+        assert len(engine.generate_fn) == 1
+        assert fn is engine.generate_fn(cfg, 3, 0.0, False, None, False)
+        with pytest.raises(ValueError):
+            engine.set_generate_cache_size(0)
+    finally:
+        engine.set_generate_cache_size(old_size)
+
+
 def test_quant_pallas_matches_xla_exactly(qsetup):
     """Acceptance: quant decode runs through bitplane_matmul_pallas — and
     because both backends are exact integer programs, the kernel path must
@@ -103,8 +196,10 @@ def test_plane_traffic_stats_reported(qsetup):
     tile = np.asarray(stats["plane_traffic_fraction"])
     elem = np.asarray(stats["element_traffic_fraction"])
     assert tile.shape == (4,) and elem.shape == (4,)
-    assert ((tile > 0.0) & (tile <= 1.0)).all()
-    assert ((elem > 0.0) & (elem <= 1.0)).all()
+    # the final token's forward is skipped (dead logits) -> exact-zero row
+    assert ((tile[:-1] > 0.0) & (tile[:-1] <= 1.0)).all()
+    assert ((elem[:-1] > 0.0) & (elem[:-1] <= 1.0)).all()
+    assert tile[-1] == 0.0 and elem[-1] == 0.0
     # element granularity is at least as fine as tile granularity
     assert (elem <= tile + 1e-6).all()
 
