@@ -11,8 +11,15 @@ pass runs the quantized bit-plane path with per-request
 ``plane_traffic_fraction`` / ``element_traffic_fraction`` reporting — the
 sustained-load image of the paper's §VI memory-access savings.
 
+The **sharded** variant (``serve_bench_sharded`` / ``--sharded``) replays
+the same trace through a mesh-native scheduler (``mesh='2x2'`` data x model
+by default) in a SUBPROCESS with forced host devices — the parent process
+keeps its single real device — and asserts token parity against the
+single-device scheduler before reporting throughput.
+
   PYTHONPATH=src python -m benchmarks.serve_bench            # full bench
   PYTHONPATH=src python -m benchmarks.serve_bench --dry      # CI smoke
+  PYTHONPATH=src python -m benchmarks.serve_bench --sharded  # mesh variant
   PYTHONPATH=src python -m benchmarks.run --only serve       # via driver
 
 Rows print as ``serve.<name>,<value>,`` CSV like every other bench.
@@ -21,10 +28,15 @@ Rows print as ``serve.<name>,<value>,`` CSV like every other bench.
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
 import time
 from typing import List, Tuple
 
 import numpy as np
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _make_trace(rng, n_requests: int, vocab: int, min_len: int, max_len: int,
@@ -146,7 +158,83 @@ def serve_bench(arch: str = "smollm_135m", n_requests: int = 24,
     return rows
 
 
-ALL_SERVE_BENCHES = {"serve": serve_bench}
+def _sharded_child(arch: str, n_requests: int, max_slots: int,
+                   tick_steps: int, max_new: int, seed: int,
+                   buckets: Tuple[int, ...], mesh_spec: str):
+    """Runs INSIDE the forced-multi-device subprocess: single-device vs
+    mesh-sharded scheduler over the same trace — parity asserted, both
+    throughputs reported."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import init_params
+
+    cfg = get_smoke(arch).replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    pool_len = max(buckets) + max_new + tick_steps
+    trace = _make_trace(rng, n_requests, cfg.vocab_size,
+                        min_len=4, max_len=max(buckets), rate=0.0)
+    rows = []
+    tokens = {}
+    for label, mesh in (("single", None),
+                        (mesh_spec, make_serve_mesh(mesh_spec))):
+        from repro.serving.scheduler import ServeScheduler
+        sched = ServeScheduler(cfg, params, max_slots=max_slots,
+                               max_len=pool_len, buckets=buckets,
+                               tick_steps=tick_steps, mesh=mesh)
+        _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size),
+                       max_new)
+        results, t = _run_scheduler(sched, trace, max_new)
+        tokens[label] = [r.tokens for r in results[-n_requests:]]
+        rows.append((f"serve.{cfg.name}.sharded[{label}].tok_s",
+                     n_requests * max_new / t, float("nan")))
+    assert tokens["single"] == tokens[mesh_spec], \
+        "sharded scheduler tokens diverged from single-device"
+    rows.append((f"serve.{cfg.name}.sharded[{mesh_spec}].bit_equal",
+                 1.0, float("nan")))
+    return rows
+
+
+def serve_bench_sharded(arch: str = "smollm_135m", n_requests: int = 16,
+                        max_slots: int = 8, tick_steps: int = 8,
+                        max_new: int = 16, seed: int = 0,
+                        buckets: Tuple[int, ...] = (8, 16, 32),
+                        mesh_spec: str = "2x2", devices: int = 4):
+    """Mesh-sharded serve bench: spawns a subprocess with ``devices`` forced
+    host devices (the calling process' jax stays single-device) and parses
+    its CSV rows.  Registered in ``benchmarks.run`` as ``serve_sharded``."""
+    args = ["--child-sharded", "--arch", arch,
+            "--requests", str(n_requests), "--max-slots", str(max_slots),
+            "--tick-steps", str(tick_steps), "--new-tokens", str(max_new),
+            "--seed", str(seed), "--mesh", mesh_spec,
+            "--buckets", ",".join(str(b) for b in buckets)]
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=os.pathsep.join(
+            [_REPO, os.path.join(_REPO, "src"),
+             os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.serve_bench"] + args,
+        capture_output=True, text=True, timeout=1200, env=env, cwd=_REPO)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded serve bench child failed:\n"
+                           f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("serve."):
+            name, val, _ = line.split(",")
+            rows.append((name, float(val), float("nan")))
+    if not rows:
+        raise RuntimeError(f"sharded serve bench child produced no rows:\n"
+                           f"{out.stdout}")
+    return rows
+
+
+ALL_SERVE_BENCHES = {"serve": serve_bench, "serve_sharded": serve_bench_sharded}
 
 
 def main(argv=None) -> None:
@@ -162,13 +250,43 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dry", action="store_true",
                     help="CI smoke: tiny trace, checks wiring + that the "
-                         "scheduler runs end-to-end")
+                         "scheduler runs end-to-end (single-device AND a "
+                         "2x2 sharded pass)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the mesh-sharded variant (subprocess with "
+                         "forced host devices)")
+    ap.add_argument("--mesh", default="2x2",
+                    help="DxM mesh spec for the sharded variant")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host device count for the sharded variant")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated prefill buckets (child mode)")
+    ap.add_argument("--child-sharded", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: runs inside the
+                                              # forced-device subprocess
     args = ap.parse_args(argv)
 
-    if args.dry:
+    buckets = (tuple(int(b) for b in args.buckets.split(","))
+               if args.buckets else (8, 16, 32))
+    if args.child_sharded:
+        rows = _sharded_child(args.arch, args.requests, args.max_slots,
+                              args.tick_steps, args.new_tokens, args.seed,
+                              buckets, args.mesh)
+    elif args.dry:
         rows = serve_bench(args.arch, n_requests=4, max_slots=2,
                            tick_steps=2, max_new=4, rate=args.rate,
                            seed=args.seed, buckets=(8, 16))
+        rows += serve_bench_sharded(args.arch, n_requests=4, max_slots=2,
+                                    tick_steps=2, max_new=4, seed=args.seed,
+                                    buckets=(8, 16), mesh_spec=args.mesh,
+                                    devices=args.devices)
+    elif args.sharded:
+        rows = serve_bench_sharded(args.arch, n_requests=args.requests,
+                                   max_slots=args.max_slots,
+                                   tick_steps=args.tick_steps,
+                                   max_new=args.new_tokens, seed=args.seed,
+                                   buckets=buckets,
+                                   mesh_spec=args.mesh, devices=args.devices)
     else:
         rows = serve_bench(args.arch, n_requests=args.requests,
                            max_slots=args.max_slots,

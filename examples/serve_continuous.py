@@ -13,16 +13,31 @@ under sustained multi-request load.
   PYTHONPATH=src python examples/serve_continuous.py
   PYTHONPATH=src python examples/serve_continuous.py --arch mamba2-780m
   PYTHONPATH=src python examples/serve_continuous.py --quant --backend xla
+
+``--mesh DxM`` serves tensor/data-parallel over a host-device mesh (pool
+batch-sharded on ``data``, weights TP on ``model``); the per-request parity
+check against ``greedy_generate`` still holds bit-for-bit.  On a CPU box
+pair it with ``--host-devices N``:
+
+  PYTHONPATH=src python examples/serve_continuous.py --mesh 2x2 --host-devices 4
 """
 
 import argparse
+import sys
 import time
+
+# must precede the first jax import (jax locks the device count at init;
+# repro.launch.host_devices is deliberately jax-free)
+if __name__ == "__main__":
+    from repro.launch.host_devices import force_host_devices
+    force_host_devices(sys.argv)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
+from repro.launch.mesh import make_serve_mesh
 from repro.models import init_params
 from repro.models.quantize import quantize_model_params
 from repro.serving import ServeScheduler, greedy_generate
@@ -37,6 +52,11 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--quant", action="store_true")
     ap.add_argument("--backend", default="pallas", choices=["pallas", "xla"])
+    ap.add_argument("--mesh", default=None,
+                    help="DxM data x model mesh (e.g. 2x2) for sharded "
+                         "serving; default single-device")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N host devices (see module docstring)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -45,12 +65,13 @@ def main():
     if args.quant:
         params = quantize_model_params(cfg, params)
     quant = args.backend if args.quant else False
+    mesh = make_serve_mesh(args.mesh) if args.mesh else None
 
     sched = ServeScheduler(cfg, params, max_slots=args.max_slots,
                            max_len=64 + args.new_tokens,
                            buckets=(8, 16, 32, 64), quant=quant,
                            with_stats=args.quant,
-                           tick_steps=args.tick_steps)
+                           tick_steps=args.tick_steps, mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size,
@@ -64,6 +85,8 @@ def main():
     dt = time.perf_counter() - t0
     total = sum(len(r.tokens) for r in results)
     mode = f"qeihan-int8-bitplane[{args.backend}]" if args.quant else "float"
+    if mesh is not None:
+        mode += f" | mesh {args.mesh}"
     print(f"[{cfg.name} | {mode}] {len(results)} requests / "
           f"{args.max_slots} slots: {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s incl. compile)")

@@ -1,0 +1,45 @@
+"""``--host-devices N`` bootstrap for CLI entry points.
+
+jax locks the host device count at first init, so this must run before the
+first ``import jax`` — which is why this module is deliberately jax-free
+(and ``repro``/``repro.launch`` are namespace packages, so importing it
+pulls in nothing else).  Shared by ``repro.launch.serve`` and
+``examples/serve_continuous.py``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import warnings
+
+_COUNT_RE = re.compile(r"--xla_force_host_platform_device_count=(\d+)")
+
+
+def force_host_devices(argv, environ=os.environ):
+    """Apply ``--host-devices N`` / ``--host-devices=N`` from ``argv`` to
+    ``XLA_FLAGS``.  Appends to a pre-set ``XLA_FLAGS`` rather than being
+    swallowed by it; an existing forced count is *replaced* (with a warning
+    when it differs) — the explicitly passed knob always wins.  Returns the
+    requested count, or None if the flag is absent."""
+    n = None
+    for i, a in enumerate(argv):
+        if a == "--host-devices" and i + 1 < len(argv):
+            n = int(argv[i + 1])
+        elif a.startswith("--host-devices="):
+            n = int(a.split("=", 1)[1])
+    if n is None:
+        return None
+    flag = f"--xla_force_host_platform_device_count={n}"
+    prev = environ.get("XLA_FLAGS", "")
+    m = _COUNT_RE.search(prev)
+    if m:
+        if int(m.group(1)) != n:
+            warnings.warn(
+                f"--host-devices {n} replaces the existing "
+                f"xla_force_host_platform_device_count={m.group(1)} "
+                f"in XLA_FLAGS")
+        environ["XLA_FLAGS"] = _COUNT_RE.sub(flag, prev)
+    else:
+        environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+    return n

@@ -8,6 +8,9 @@ init; smoke tests see the real single device.
 
 from __future__ import annotations
 
+import re
+import warnings
+
 import jax
 
 
@@ -24,11 +27,51 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model_parallel: int = 1):
-    """Degenerate mesh over whatever devices exist (CPU smoke runs)."""
+    """``data x model`` mesh over whatever devices exist (CPU smoke runs).
+
+    A single-device process silently falls back to ``model_parallel=1``
+    (with a warning) so the same CLI invocation works on a laptop and under
+    ``--xla_force_host_platform_device_count``; any other indivisibility is
+    a real configuration error and raises (a ``ValueError``, not an assert —
+    asserts vanish under ``python -O``).
+    """
     n = len(jax.devices())
-    assert n % model_parallel == 0
+    if model_parallel != 1 and n == 1:
+        warnings.warn(f"make_host_mesh: only 1 device visible; falling back "
+                      f"to model_parallel=1 (requested {model_parallel})")
+        model_parallel = 1
+    if model_parallel < 1 or n % model_parallel != 0:
+        raise ValueError(
+            f"make_host_mesh: model_parallel={model_parallel} must be >= 1 "
+            f"and divide the visible device count ({n} devices)")
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+_MESH_SPEC_RE = re.compile(r"^(\d+)x(\d+)$")
+
+
+def make_serve_mesh(spec: str, model_parallel: int = 1):
+    """Mesh from a CLI spec: ``host`` (all devices / ``model_parallel``),
+    ``pod`` / ``pod2`` (production v5e meshes), or an explicit ``DxM``
+    (``2x2``, ``4x1``, ...) ``data x model`` grid over the visible devices.
+    """
+    if spec == "host":
+        return make_host_mesh(model_parallel)
+    if spec in ("pod", "pod2"):
+        return make_production_mesh(multi_pod=spec == "pod2")
+    m = _MESH_SPEC_RE.match(spec)
+    if not m:
+        raise ValueError(f"mesh spec {spec!r}: expected 'host', 'pod', "
+                         f"'pod2', or 'DxM' (e.g. '2x2')")
+    d, t = int(m.group(1)), int(m.group(2))
+    n = len(jax.devices())
+    if d * t > n:
+        raise ValueError(f"mesh spec {spec!r} needs {d * t} devices but only "
+                         f"{n} are visible (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={d * t} "
+                         f"for a CPU smoke run)")
+    return jax.make_mesh((d, t), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -13,18 +13,35 @@ and retired/re-filled on EOS or length — decode never drains:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --continuous --requests 16 --max-slots 4 --new-tokens 16 --quant
+
+``--mesh DxM`` (e.g. ``2x2``, ``4x1``) runs either mode tensor/data-parallel
+over a ``data x model`` host mesh: params get the TP rules (incl. packed bit
+-planes), the slot pool shards batch-on-data, and the token stream is
+bit-equal to the single-device run (tests/test_serve_sharded.py).  On a CPU
+box add ``--host-devices N`` (must be the FIRST jax knob to take effect — it
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax init):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
+      --continuous --mesh 2x2 --host-devices 4
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+
+# must precede the first jax import: jax locks the device count at init
+# (repro.launch.host_devices is deliberately jax-free)
+if __name__ == "__main__":
+    from repro.launch.host_devices import force_host_devices
+    force_host_devices(sys.argv)
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke
-from repro.launch.mesh import batch_axes, make_host_mesh, make_production_mesh
+from repro.launch.mesh import batch_axes, make_serve_mesh
 from repro.launch.shardings import cache_shardings, params_shardings
 from repro.models.model import init_caches, init_params
 from repro.models.quantize import quantize_model_params
@@ -32,7 +49,7 @@ from repro.models.sharding import mesh_axes
 from repro.serving.engine import make_decode_loop, make_prefill_step
 
 
-def _serve_continuous(cfg, params, args):
+def _serve_continuous(cfg, params, args, mesh):
     """Queued-trace continuous batching: submit everything, drain, report
     sustained tok/s + per-request plane traffic."""
     import numpy as np
@@ -45,7 +62,8 @@ def _serve_continuous(cfg, params, args):
         cfg, params, max_slots=args.max_slots,
         max_len=max(buckets) + args.new_tokens + args.tick_steps,
         buckets=buckets, quant=quant, with_stats=args.quant,
-        tick_steps=args.tick_steps)
+        tick_steps=args.tick_steps,
+        mesh=mesh if mesh is not None and mesh.size > 1 else None)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         n = int(rng.integers(2, args.prompt_len + 1))
@@ -55,8 +73,11 @@ def _serve_continuous(cfg, params, args):
     results = sched.run()
     dt = time.perf_counter() - t0
     total = sum(len(r.tokens) for r in results)
-    print(f"[serve] {cfg.name}: continuous batching — {len(results)} "
-          f"requests, {sched.max_slots} slots, tick={sched.tick_steps}: "
+    mesh_tag = ("1-device" if sched.mesh is None else
+                "x".join(str(s) for s in sched.mesh.devices.shape) + " mesh")
+    print(f"[serve] {cfg.name}: continuous batching ({mesh_tag}) — "
+          f"{len(results)} requests, {sched.max_slots} slots, "
+          f"tick={sched.tick_steps}: "
           f"{total} tokens in {dt:.3f}s ({total / max(dt, 1e-9):.1f} tok/s "
           f"incl. compile); programs: {sched.compile_stats()}")
     if not results:
@@ -74,7 +95,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", default="host", choices=["host", "pod", "pod2"])
+    ap.add_argument("--mesh", default="host",
+                    help="'host', 'pod', 'pod2', or an explicit DxM "
+                         "data x model grid (e.g. '2x2', '4x1')")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N host (CPU) devices for a local mesh smoke "
+                         "run (consumed before jax init; see module "
+                         "docstring)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -100,10 +127,7 @@ def main(argv=None):
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.frontend == "audio_stub":
         raise SystemExit("use examples/serve_decode.py for the audio stub")
-    if args.mesh == "host":
-        mesh = make_host_mesh(args.model_parallel)
-    else:
-        mesh = make_production_mesh(multi_pod=args.mesh == "pod2")
+    mesh = make_serve_mesh(args.mesh, args.model_parallel)
     bax = batch_axes(mesh)
     max_len = args.prompt_len + args.new_tokens
 
@@ -116,9 +140,13 @@ def main(argv=None):
         psh = params_shardings(mesh, params, fsdp=False)
         params = jax.device_put(params, psh)
         if args.continuous:
-            return _serve_continuous(cfg, params, args)
+            return _serve_continuous(cfg, params, args, mesh)
         caches = init_caches(cfg, args.batch, max_len, dtype=cfg.dtype)
-        csh = cache_shardings(mesh, caches, batch=args.batch)
+        # ssm_model=False: this path EXECUTES decode — a model-sharded SSM
+        # recurrent carry is the documented CPU-SPMD miscompile (DESIGN.md
+        # §Sharded serving); only lowering-only consumers keep it
+        csh = cache_shardings(mesh, caches, batch=args.batch,
+                              ssm_model=False)
         caches = jax.device_put(caches, csh)
 
         key = jax.random.PRNGKey(args.seed)

@@ -175,12 +175,22 @@ def batch_shardings(mesh: Mesh, batch_tree: Any,
 def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
                     long_context: bool = False,
                     axes: Optional[tuple] = None,
-                    model_axis: Optional[str] = "model") -> Any:
+                    model_axis: Optional[str] = "model",
+                    ssm_model: bool = True) -> Any:
     """KV caches (R, B, S, Hkv, D) / SSM states (R, B, H, P, N).
 
     decode: batch on the data axes; long-context (batch=1): KV sequence dim
     on data instead.  Model-axis sharding: kv-heads / ssm-heads when
-    divisible.
+    divisible.  The per-slot ``length`` vector (``init_caches(per_slot=
+    True)``, shape (B,)) follows the batch axes like every other per-row
+    cache leaf — the scalar whole-batch ``length`` replicates.
+
+    ``ssm_model=False`` keeps the SSM/conv state leaves batch-only: a
+    model-sharded recurrent state carried through the serve tick's scan is
+    miscompiled by the jax 0.4.37 CPU SPMD pipeline (partially-replicated
+    meshes; tests/test_serve_sharded.py), so the *executing* serve path
+    (``serve_shardings``) opts out while lowering-only consumers (the
+    dry-run) keep the full TP image.
     """
     from repro.launch.mesh import batch_axes
     bax = tuple(axes) if axes is not None else batch_axes(mesh)
@@ -192,6 +202,8 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
         name = jax.tree_util.keystr(path)
         shape = leaf.shape
         if name.endswith("['length']"):
+            if len(shape) == 1 and nb > 1 and shape[0] % nb == 0:
+                return NamedSharding(mesh, P(bax if len(bax) > 1 else bax[0]))
             return NamedSharding(mesh, P())
         entries = [None] * len(shape)
         if "'k'" in name or "'v'" in name:          # (R, B, S, Hkv, D)
@@ -207,15 +219,56 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
         elif "'ssm'" in name:                       # (R, B, H, P, N)
             if shape[1] % nb == 0 and nb > 1:
                 entries[1] = bax if len(bax) > 1 else bax[0]
-            if msz > 1 and shape[2] % msz == 0:
+            if ssm_model and msz > 1 and shape[2] % msz == 0:
                 entries[2] = model_axis
         elif "'conv'" in name:                      # (R, B, W-1, C)
             if shape[1] % nb == 0 and nb > 1:
                 entries[1] = bax if len(bax) > 1 else bax[0]
-            if msz > 1 and shape[3] % msz == 0:
+            if ssm_model and msz > 1 and shape[3] % msz == 0:
                 entries[3] = model_axis
         return NamedSharding(mesh, P(*entries))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(caches_tree)
     return jax.tree_util.tree_unflatten(
         treedef, [one_path(p, l) for p, l in flat])
+
+
+def serve_shardings(mesh: Mesh, params_tree: Any, caches_tree: Any, *,
+                    batch: int,
+                    model_axis: Optional[str] = "model",
+                    axes: Optional[tuple] = None) -> dict:
+    """Everything the mesh-native serving stack pins at jit boundaries.
+
+    One bundle so ``serving/engine.py`` / ``serving/scheduler.py`` consume a
+    single object instead of re-deriving rules leaf by leaf:
+
+    * ``params``  — TP rules (``_TP_RULES``: float weights AND packed
+      bit-planes — the plane leaves shard on the same relative dims as their
+      float counterparts, the decode-time image of the paper's §IV-B
+      vault-level parallelism), no FSDP (serving wants weights resident).
+    * ``caches``  — KV/SSM slot pool: batch on ``data``, kv-seq on ``model``
+      when divisible, per-slot (B,) ``length`` on ``data``.  SSM/conv state
+      stays batch-only (``ssm_model=False`` — the executing CPU SPMD
+      pipeline miscompiles a model-sharded recurrent carry; see
+      ``cache_shardings``).
+    * ``logits``  — (B, V) decode carry: batch on ``data``, vocab replicated
+      (the greedy argmax stays a local per-row reduction).
+    * ``tokens`` / ``active`` — per-slot (B, ...) vectors on ``data``.
+    * ``replicated`` — the catch-all for host-supplied scalars.
+    """
+    from repro.launch.mesh import batch_axes
+    bax = tuple(axes) if axes is not None else batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in bax]))
+    row = (P(bax if len(bax) > 1 else bax[0])
+           if nb > 1 and batch % nb == 0 else P())
+    return {
+        "params": params_shardings(mesh, params_tree, fsdp=False,
+                                   model_axis=model_axis),
+        "caches": cache_shardings(mesh, caches_tree, batch=batch,
+                                  axes=bax, model_axis=model_axis,
+                                  ssm_model=False),
+        "logits": NamedSharding(mesh, P(*row, None)),
+        "tokens": NamedSharding(mesh, P(*row, None)),
+        "active": NamedSharding(mesh, row),
+        "replicated": NamedSharding(mesh, P()),
+    }

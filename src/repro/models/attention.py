@@ -231,7 +231,12 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
     q = q.reshape(b, s, h, hd)
     k = k.reshape(b, s, hkv, hd)
     v = v.reshape(b, s, hkv, hd)
-    q = shard(q, "bthd")
+    # force=True pins head_dim (and any non-divisible heads dim) REPLICATED
+    # before rope: rope splits/concats the head_dim axis, which GSPMD must
+    # never see sharded (models/sharding.py::shard on the CPU-SPMD hazard)
+    q = shard(q, "bthd", force=True)
+    k = shard(k, "bthd", force=True)
+    v = shard(v, "bthd", force=True)
 
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)

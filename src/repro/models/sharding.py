@@ -46,6 +46,9 @@ _KIND_LAYOUT = {
     "bchll": ("b", None, "m", None, None),
     "bchpn": ("b", None, "m", None, None),
     "cache": ("b", "cs", None, None),
+    # channels-REPLICATED (B, S, C): used with force=True to pin tensors
+    # whose channel axis is about to be concat/split (the mamba conv window)
+    "btc": ("b", None, None),
 }
 
 
@@ -99,7 +102,7 @@ def _fits(dim_size: int, axis, sizes: Dict[str, int]) -> bool:
     return dim_size % total == 0
 
 
-def spec_for(kind: str, shape) -> Optional[P]:
+def spec_for(kind: str, shape, force: bool = False) -> Optional[P]:
     ax = _axes()
     if ax is None:
         return None
@@ -128,17 +131,43 @@ def spec_for(kind: str, shape) -> Optional[P]:
             entries.append(target)
         else:
             entries.append(None)
-    if all(e is None for e in entries):
+    if all(e is None for e in entries) and not force:
         return None
     return P(*entries)
 
 
-def shard(x: jax.Array, kind: str) -> jax.Array:
-    s = spec_for(kind, x.shape)
+def shard(x: jax.Array, kind: str, force: bool = False) -> jax.Array:
+    """Sharding hint; a no-op outside a :func:`mesh_axes` scope.
+
+    ``force=True`` applies the constraint even when every dim falls back to
+    replicated — an all-``None`` spec is normally skipped as useless, but it
+    is exactly what pins a tensor REPLICATED against GSPMD's propagation
+    choices.  Rope inputs need this: jax 0.4.37's CPU SPMD backend
+    miscompiles split/concat along a sharded axis (partially-replicated
+    meshes only — see tests/test_serve_sharded.py), and head-dim replication
+    before rope is the standard Megatron layout on TPU anyway.
+    """
+    s = spec_for(kind, x.shape, force=force)
     if s is None:
         return x
     try:
         return jax.lax.with_sharding_constraint(x, s)
+    except (ValueError, TypeError):
+        return x
+
+
+def replicate(x: jax.Array) -> jax.Array:
+    """Force ``x`` fully replicated (any rank); a no-op outside a
+    :func:`mesh_axes` scope.  The blunt instrument behind the CPU-SPMD
+    hazard rule (see :func:`shard`): tensors about to be concatenated or
+    split along an axis that param rules may have sharded — e.g. the mamba
+    conv weights — get pinned replicated first."""
+    ax = _axes()
+    if ax is None or not ax["sizes"]:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, P(*([None] * getattr(x, "ndim", 0))))
     except (ValueError, TypeError):
         return x
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense, rms_norm
-from repro.models.sharding import shard
+from repro.models.sharding import replicate, shard
 
 
 class SSMState(NamedTuple):
@@ -148,6 +148,9 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
     if "in_proj" in p:                    # legacy fused layout
         zxbcdt = dense(p["in_proj"], x,
                        quant=p.get("in_proj_q") if quant else None, ctx=quant)
+        # pin channels replicated before the split (CPU-SPMD hazard:
+        # split/concat must never run along a sharded axis)
+        zxbcdt = shard(zxbcdt, "btc", force=True)
         z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
         xs_r, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
     else:
@@ -170,12 +173,28 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
         c = _causal_conv(c, p["conv_wc"], p["conv_bc"])
         new_conv = None
     else:
+        # the rolling window concats (xs|B|C) along channels and the conv
+        # cache arrives model-sharded on that axis — pin every piece
+        # replicated first: the channel axis must never be concat/split
+        # while sharded (CPU-SPMD hazard, models/sharding.py::shard); the
+        # window is (B, W-1+s, C)-tiny so replication costs nothing
+        xs_r = shard(xs_r, "btc", force=True)
+        b = shard(b, "btc", force=True)
+        c = shard(c, "btc", force=True)
+        conv_in = shard(state.conv, "btc", force=True)
         window = jnp.concatenate(
-            [state.conv, jnp.concatenate([xs_r, b, c], -1).astype(
-                state.conv.dtype)], axis=1)                       # (B, W-1+s, C)
+            [conv_in, jnp.concatenate([xs_r, b, c], -1).astype(
+                conv_in.dtype)], axis=1)                          # (B, W-1+s, C)
         xbc_f = jnp.zeros((bsz, s, conv_dim), jnp.float32)
-        w = jnp.concatenate([p["conv_wx"], p["conv_wb"], p["conv_wc"]], -1)
-        bias = jnp.concatenate([p["conv_bx"], p["conv_bb"], p["conv_bc"]], -1)
+        # conv_wx/bx arrive channel-sharded from the param rules; their
+        # concat with the replicated b/c conv weights runs along that axis
+        # — same hazard, same cure (they're (W, C)-tiny)
+        w = jnp.concatenate([replicate(p["conv_wx"]),
+                             replicate(p["conv_wb"]),
+                             replicate(p["conv_wc"])], -1)
+        bias = jnp.concatenate([replicate(p["conv_bx"]),
+                                replicate(p["conv_bb"]),
+                                replicate(p["conv_bc"])], -1)
         w = w.astype(jnp.float32)
         width = w.shape[0]
         for i in range(width):
@@ -185,6 +204,10 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
             new_conv = window[:, s:s + cfg.conv_width - 1]
         else:
             new_conv = _window_at(window, valid_len, cfg.conv_width)
+        # pin before the split: the downstream heads-sharding hint on xs
+        # otherwise back-propagates through the reshape and re-shards this
+        # very split (observed CPU-SPMD miscompile, tests/test_serve_sharded)
+        xbc = shard(xbc, "btc", force=True)
         xs_r, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
 
     xs = jax.nn.silu(xs_r.astype(jnp.float32)).astype(x.dtype)
@@ -209,21 +232,34 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
                                init_state=state.ssm)
         new_state = SSMState(ssm=final, conv=new_conv)
     else:
-        # short-step decode: pure recurrence
-        def step(st, xs_t):
-            dx_t, a_t, b_t, c_t = xs_t                            # (B,H,P),(B,H),(B,N),(B,N)
+        # short-step decode: pure recurrence, UNROLLED (s <= conv_width
+        # here, so at most W steps) — a lax.scan at this spot nests three
+        # deep at serve time (scheduler tick scan -> layer scan -> this);
+        # unrolling is the faster lowering for a <= 4-step loop and one
+        # fewer nested-scan level for the SPMD partitioner to get wrong.
+        def step(st, dx_t, a_t, b_t, c_t):
             st = st * jnp.exp(a_t)[..., None, None] \
                 + jnp.einsum("bhp,bn->bhpn", dx_t, b_t)
             y_t = jnp.einsum("bhpn,bn->bhp", st, c_t)
             return st, y_t
-        xs_seq = (dx.transpose(1, 0, 2, 3), a.transpose(1, 0, 2),
-                  b.astype(jnp.float32).transpose(1, 0, 2),
-                  c.astype(jnp.float32).transpose(1, 0, 2))
-        final, y = jax.lax.scan(step, state.ssm, xs_seq)
-        y = y.transpose(1, 0, 2, 3)                               # (B,S,H,P)
+        bf = b.astype(jnp.float32)
+        cf = c.astype(jnp.float32)
+        st = state.ssm
+        ys = []
+        for t in range(s):
+            st, y_t = step(st, dx[:, t], a[:, t], bf[:, t], cf[:, t])
+            ys.append(y_t)
+        final = st
+        y = jnp.stack(ys, axis=1)                                 # (B,S,H,P)
         new_state = SSMState(ssm=final, conv=new_conv)
 
     y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    if state is not None:
+        # serving path: the (H, P) -> d_inner merge below runs on a heads-
+        # sharded tensor — pin it replicated first (CPU-SPMD hazard; decode
+        # tensors are tick-sized, so the gather is noise).  The training
+        # path keeps GSPMD's layout freedom.
+        y = replicate(y)
     # back to the block io dtype — the SSD math runs f32; letting f32 leak
     # into out_proj doubles its dot + TP-reduce traffic (§Perf log)
     y = y.reshape(bsz, s, d_inner).astype(x.dtype)

@@ -15,6 +15,13 @@ interpret mode off-TPU), accepts packed planes from
 reports the per-step ``plane_traffic_fraction`` (the fraction of weight-plane
 tiles the kernel actually fetches: the decode-time image of the paper's §VI
 memory-access savings).
+
+Every step builder is **mesh-native**: pass ``mesh=`` (plus optional
+``in_shardings`` / ``out_shardings`` pytrees) and the returned callable is
+jitted with those shardings and traced under the model's activation-sharding
+binding (``models.sharding.mesh_axes``) — decode runs tensor/data-parallel
+with the same token stream as the single-device program (DESIGN.md §Sharded
+serving).
 """
 
 from __future__ import annotations
@@ -31,13 +38,74 @@ from repro.models.model import ModelConfig, forward, init_caches
 QuantFlag = Union[bool, str, QuantCtx]
 
 
-def make_prefill_step(cfg: ModelConfig, quant: QuantFlag = False):
+def mesh_fingerprint(mesh) -> Optional[tuple]:
+    """Hashable identity of a mesh for program-cache keys: axis names, axis
+    sizes, and the device ids in mesh order.  Two meshes with the same
+    fingerprint lower to the same partitioned program; ``None`` stands for
+    unsharded single-device execution — so sharded and unsharded variants of
+    one configuration coexist in the generate-program LRU instead of
+    silently reusing a stale compiled program."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def jit_sharded(fn, mesh=None, *, in_shardings=None, out_shardings=None,
+                donate_argnums=(), static_argnums=()):
+    """``jax.jit`` that pins data placement and binds activation sharding.
+
+    With ``mesh=None`` this is plain ``jax.jit`` (the single-device path is
+    byte-identical to before the mesh refactor).  With a mesh, the function
+    is jitted with the given ``in_shardings`` / ``out_shardings`` and every
+    call enters the mesh + ``mesh_axes`` scope so the model's ``shard()``
+    hints bind at trace time (decode never sequence-shards: ``seq_shard=
+    False``)."""
+    kw: dict = {"donate_argnums": donate_argnums}
+    if static_argnums:
+        kw["static_argnums"] = static_argnums
+    if mesh is not None:
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            kw["out_shardings"] = out_shardings
+    jitted = jax.jit(fn, **kw)
+    if mesh is None:
+        return jitted
+
+    from repro.launch.mesh import batch_axes
+    from repro.models.sharding import mesh_axes
+
+    def call(*args, **kwargs):
+        with mesh, mesh_axes(batch=batch_axes(mesh), model="model",
+                             seq_shard=False, sizes=dict(mesh.shape),
+                             mesh=mesh):
+            return jitted(*args, **kwargs)
+
+    call.jitted = jitted
+    return call
+
+
+def _maybe_shard(fn, mesh, in_shardings, out_shardings):
+    """Builders return the bare closure without a mesh (callers jit), or the
+    sharded-jitted program with one."""
+    if mesh is None:
+        return fn
+    return jit_sharded(fn, mesh, in_shardings=in_shardings,
+                       out_shardings=out_shardings)
+
+
+def make_prefill_step(cfg: ModelConfig, quant: QuantFlag = False, *,
+                      mesh=None, in_shardings=None, out_shardings=None):
     """(params, batch) -> (last-token logits, caches).
 
     Runs the full forward over the prompt while writing the KV/SSM caches.
     This is what the ``prefill_32k`` shape lowers.  ``quant=True`` resolves
     to the portable "xla" bit-plane backend (prefill GEMMs are MXU-shaped
-    already; the plane-skip kernel targets the decode hot path).
+    already; the plane-skip kernel targets the decode hot path).  With
+    ``mesh=`` the returned callable is jitted with the given shardings
+    (see :func:`jit_sharded`); without one it is the bare closure and the
+    caller jits.
     """
     ctx = as_quant_ctx(quant, default_backend="xla")
 
@@ -48,11 +116,12 @@ def make_prefill_step(cfg: ModelConfig, quant: QuantFlag = False):
             image_embeds=batch.get("image_embeds"),
             caches=caches, quant=ctx)
         return logits[:, -1], caches
-    return prefill_step
+    return _maybe_shard(prefill_step, mesh, in_shardings, out_shardings)
 
 
 def make_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
-                    with_stats: bool = False):
+                    with_stats: bool = False, *,
+                    mesh=None, in_shardings=None, out_shardings=None):
     """(params, caches, token) -> (logits, caches[, stats]): ONE new token
     against a pre-filled cache.  This is what ``decode_32k`` / ``long_500k``
     lower.
@@ -61,6 +130,7 @@ def make_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
     run through ``bitplane_matmul_pallas`` (interpret mode off-TPU); pass
     ``quant="xla"`` for the pure-jnp bit-plane form.  ``with_stats=True``
     appends the plane-traffic stats dict (see ``models.model.forward``).
+    ``mesh=`` jits with the given shardings (:func:`jit_sharded`).
     """
     ctx = as_quant_ctx(quant, default_backend="pallas")
 
@@ -77,11 +147,12 @@ def make_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
             return logits[:, -1], caches, stats
         logits, caches = out
         return logits[:, -1], caches
-    return serve_step
+    return _maybe_shard(serve_step, mesh, in_shardings, out_shardings)
 
 
 def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
-                         with_stats: bool = False):
+                         with_stats: bool = False, *,
+                         mesh=None, in_shardings=None, out_shardings=None):
     """``(params, caches, tokens (B, 1), active (B,)) -> (logits, caches
     [, stats])``: the slot-pool decode step for continuous batching
     (``serving/scheduler.py``).
@@ -110,10 +181,11 @@ def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
         if with_stats:
             return logits[:, -1], new_caches, stats
         return logits[:, -1], new_caches
-    return slot_step
+    return _maybe_shard(slot_step, mesh, in_shardings, out_shardings)
 
 
-def make_slot_prefill(cfg: ModelConfig, quant: QuantFlag = False):
+def make_slot_prefill(cfg: ModelConfig, quant: QuantFlag = False, *,
+                      mesh=None, in_shardings=None, out_shardings=None):
     """``(params, prompt (B, bucket), true_len (B,), caches) -> (last-real
     logits (B, V), caches)``: bucketed prefill for slot admission.
 
@@ -135,7 +207,7 @@ def make_slot_prefill(cfg: ModelConfig, quant: QuantFlag = False):
         caches = dict(caches)
         caches["length"] = true_len
         return last, caches
-    return prefill
+    return _maybe_shard(prefill, mesh, in_shardings, out_shardings)
 
 
 # ---------------------------------------------------------------------------
@@ -246,7 +318,7 @@ def make_decode_loop(cfg: ModelConfig, max_new: int, *,
 
 def _build_generate(cfg: ModelConfig, max_new: int, temperature: float,
                     quant: QuantFlag, eos_id: Optional[int],
-                    with_stats: bool):
+                    with_stats: bool, mesh=None):
     prefill = make_prefill_step(cfg, quant)
     decode = make_decode_loop(cfg, max_new, temperature=temperature,
                               quant=quant, eos_id=eos_id,
@@ -258,7 +330,10 @@ def _build_generate(cfg: ModelConfig, max_new: int, temperature: float,
         logits, caches = prefill(params, {"tokens": prompt}, caches)
         return decode(params, caches, logits, key)
 
-    return jax.jit(generate)
+    # sharded: params arrive device-put to their TP shardings and the
+    # activation hints bind inside the trace; cache shardings propagate from
+    # the params/batch (the caches are created inside the program)
+    return jit_sharded(generate, mesh)
 
 
 class _GenerateFnCache:
@@ -279,12 +354,17 @@ class _GenerateFnCache:
         self._maxsize = maxsize
 
     def __call__(self, cfg: ModelConfig, max_new: int, temperature: float,
-                 quant: QuantFlag, eos_id: Optional[int], with_stats: bool):
-        key = (cfg, max_new, temperature, quant, eos_id, with_stats)
+                 quant: QuantFlag, eos_id: Optional[int], with_stats: bool,
+                 mesh=None):
+        # the mesh fingerprint is part of the key: switching between sharded
+        # and unsharded serving (or between meshes) in one process must NOT
+        # reuse the other variant's compiled program
+        key = (cfg, max_new, temperature, quant, eos_id, with_stats,
+               mesh_fingerprint(mesh))
         fn = self._data.get(key)
         if fn is None:
             fn = self._data[key] = _build_generate(
-                cfg, max_new, temperature, quant, eos_id, with_stats)
+                cfg, max_new, temperature, quant, eos_id, with_stats, mesh)
         self._data.move_to_end(key)
         while len(self._data) > self._maxsize:
             self._data.popitem(last=False)
@@ -329,7 +409,8 @@ def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
                     key: Optional[jax.Array] = None,
                     quant: QuantFlag = False,
                     eos_id: Optional[int] = None,
-                    with_stats: bool = False):
+                    with_stats: bool = False,
+                    mesh=None):
     """Batched autoregressive generation as ONE fused XLA program.
 
     Token-for-token equivalent to the historical per-token Python loop
@@ -338,13 +419,16 @@ def greedy_generate(cfg: ModelConfig, params, prompt: jnp.ndarray,
     round-trips.  Returns tokens (B, max_new); with ``with_stats=True``
     returns ``(tokens, stats)`` where stats holds the per-step
     ``plane_traffic_fraction`` / ``element_traffic_fraction`` arrays.
+    ``mesh=`` runs the whole program tensor/data-parallel (pass params
+    already device-put to their TP shardings); the token stream matches the
+    single-device program bit-for-bit (tests/test_serve_sharded.py).
     """
     if not isinstance(quant, (bool, str)):
         raise TypeError("greedy_generate takes quant as bool|str; build a "
                         "custom loop via make_decode_loop for a QuantCtx")
     fn = generate_fn(cfg, int(max_new), float(temperature), quant,
                       eos_id if eos_id is None else int(eos_id),
-                      bool(with_stats))
+                      bool(with_stats), mesh)
     if key is None:
         key = jax.random.PRNGKey(0)
     toks, fracs = fn(params, prompt, key)

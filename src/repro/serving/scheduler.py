@@ -25,6 +25,16 @@ where QeiHaN's plane-skipping pays (PAPER §VI; DESIGN.md §Scheduler):
   ``element_traffic_fraction``; the scheduler attributes each step's
   fractions to the requests active at that step and reports the per-request
   mean.
+* **Mesh-native** — pass ``mesh=`` and the slot pool is allocated
+  device-sharded exactly once (batch on ``data``, kv-seq / ssm-heads on
+  ``model``, per-slot ``(B,)`` lengths on ``data`` —
+  ``launch.shardings.serve_shardings``), the prefill / write / tick
+  programs are jitted with explicit ``in_shardings`` / ``out_shardings``,
+  and admission / retirement keep touching only host-side metadata (the
+  ``active`` bitmap and per-slot token lists) — the tick loop performs no
+  cross-device gathers beyond the (B, tick_steps) token array every tick
+  already syncs to host.  Scheduler tokens are bit-equal to the
+  single-device scheduler (tests/test_serve_sharded.py).
 
 Token outputs are exactly the per-request ``greedy_generate`` outputs
 (property-tested): same prefill math (padding contributes exact zeros),
@@ -33,6 +43,7 @@ same masked decode attention, same greedy sampling.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
@@ -69,13 +80,14 @@ class RequestResult:
     rid: int
     prompt_len: int
     tokens: List[int]
-    finish_reason: str                  # "eos" | "length"
-    admitted_tick: int
+    finish_reason: str                  # "eos" | "length" | "rejected"
+    admitted_tick: int                  # -1 for rejected requests
     finished_tick: int
     # per-request mean of the per-step batch-aggregate traffic fractions
     # over the steps this request was active (nan without stats)
     plane_traffic_fraction: float = float("nan")
     element_traffic_fraction: float = float("nan")
+    error: Optional[str] = None         # why a "rejected" request never ran
 
 
 @dataclasses.dataclass
@@ -113,12 +125,17 @@ class ServeScheduler:
                  quant: engine.QuantFlag = False,
                  with_stats: bool = False,
                  tick_steps: int = 8,
-                 generate_cache_size: Optional[int] = None):
+                 generate_cache_size: Optional[int] = None,
+                 mesh=None,
+                 oversize: str = "reject"):
         if cfg.frontend != "none":
             raise ValueError("ServeScheduler serves token-id models only "
                              f"(frontend={cfg.frontend!r})")
         if max_slots < 1 or tick_steps < 1:
             raise ValueError("max_slots and tick_steps must be >= 1")
+        if oversize not in ("reject", "truncate", "raise"):
+            raise ValueError(f"oversize={oversize!r}: expected 'reject', "
+                             f"'truncate', or 'raise'")
         buckets = tuple(sorted(set(int(b) for b in buckets)))
         if not buckets or buckets[-1] > max_len:
             raise ValueError(f"buckets {buckets} must be non-empty and fit "
@@ -131,6 +148,8 @@ class ServeScheduler:
         self.quant = quant
         self.with_stats = with_stats
         self.tick_steps = tick_steps
+        self.mesh = mesh
+        self.oversize = oversize
 
         # the generate-program LRU serves the per-request parity / baseline
         # path (greedy_generate): size it so one program per (bucket x
@@ -156,6 +175,33 @@ class ServeScheduler:
         self._next_rid = 0
         self._tick_count = 0
 
+        # sharding specs: pool batch on `data`, kv-seq/ssm-heads on `model`,
+        # per-slot (B,) lengths on `data`; params get the TP rules (incl.
+        # packed bit-planes).  The pool is device-put sharded ONCE here —
+        # every later tick donates it in place.
+        if mesh is not None:
+            from repro.launch.shardings import serve_shardings
+            spec = serve_shardings(mesh, params, self._pool, batch=max_slots)
+            rep = spec["replicated"]
+            self.params = params = jax.device_put(params, spec["params"])
+            self._pool = jax.device_put(self._pool, spec["caches"])
+            self._logits = jax.device_put(self._logits, spec["logits"])
+            # batch-1 prefill outputs replicate (a 1-row batch divides no
+            # data axis); the slot write scatters them into the sharded pool
+            cache1_sh = jax.tree.map(lambda _: rep, self._pool)
+            sh = dict(
+                prefill_in=(spec["params"], rep, rep),
+                prefill_out=(rep, cache1_sh),
+                write_in=(spec["caches"], cache1_sh, spec["logits"], rep,
+                          rep),
+                write_out=(spec["caches"], spec["logits"]),
+                tick_in=(spec["params"], spec["caches"], spec["logits"],
+                         spec["active"]),
+                tick_out=(spec["logits"], spec["caches"], rep, rep),
+            )
+        else:
+            sh = collections.defaultdict(lambda: None)
+
         # --- compiled programs --------------------------------------------
         # prefill: ONE jit wrapper; it retraces per *bucket* shape only —
         # the compiled-program count is bounded by len(buckets)
@@ -165,7 +211,9 @@ class ServeScheduler:
             caches = init_caches(cfg, 1, max_len, dtype=cfg.dtype)
             return slot_prefill(params, prompt, true_len, caches)
 
-        self._prefill = jax.jit(prefill)
+        self._prefill = engine.jit_sharded(
+            prefill, mesh, in_shardings=sh["prefill_in"],
+            out_shardings=sh["prefill_out"])
 
         # slot write: shape-independent of the bucket -> exactly one program
         def write_slot(pool, slot_cache, pool_logits, slot_logits, i):
@@ -181,7 +229,9 @@ class ServeScheduler:
                 i, axis=0)
             return {"layers": layers, "length": length}, logits
 
-        self._write = jax.jit(write_slot, donate_argnums=(0, 2))
+        self._write = engine.jit_sharded(
+            write_slot, mesh, in_shardings=sh["write_in"],
+            out_shardings=sh["write_out"], donate_argnums=(0, 2))
 
         # tick: scan tick_steps slot-masked greedy steps -> one program
         step = engine.make_slot_serve_step(cfg, quant, with_stats=with_stats)
@@ -204,23 +254,50 @@ class ServeScheduler:
                 body, (logits, pool), None, length=tick_steps)
             return lg, cs, jnp.swapaxes(toks, 0, 1), fracs
 
-        self._tick = jax.jit(tick, donate_argnums=(1,))
+        self._tick = engine.jit_sharded(
+            tick, mesh, in_shardings=sh["tick_in"],
+            out_shardings=sh["tick_out"], donate_argnums=(1,))
 
     # ------------------------------------------------------------------ API
 
     def submit(self, prompt, max_new: int, eos_id: Optional[int] = None) -> int:
         """Queue one request; returns its rid (results come back in rid
-        order from :meth:`run`)."""
+        order from :meth:`run`).
+
+        A prompt that exceeds the largest prefill bucket (or whose prompt +
+        ``max_new`` overflows the slot capacity) is handled per the
+        ``oversize`` policy: ``"reject"`` (default) records a per-request
+        ``RequestResult(finish_reason="rejected", error=...)`` and leaves
+        every queued/in-flight request untouched — submission during a live
+        serve loop must never abort the loop; ``"truncate"`` keeps the most
+        recent tokens that fit; ``"raise"`` restores the historical
+        ``ValueError`` (batch scripts that want loud failures).  Empty
+        prompts and ``max_new < 1`` are caller bugs and always raise.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        bucket_for(prompt.size, self.buckets)        # validates prompt fits
-        if prompt.size + max_new > self.max_len:
-            raise ValueError(
-                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds the "
-                f"slot capacity max_len={self.max_len}")
+        fit = min(self.buckets[-1], self.max_len - max_new)
+        if prompt.size > fit:
+            why = (f"prompt length {prompt.size} exceeds the largest "
+                   f"prefill bucket {self.buckets[-1]}"
+                   if prompt.size > self.buckets[-1] else
+                   f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                   f"the slot capacity max_len={self.max_len}")
+            if self.oversize == "raise":
+                raise ValueError(why)
+            if self.oversize == "truncate" and fit >= 1:
+                prompt = prompt[-fit:]           # keep the latest context
+            else:
+                rid = self._next_rid
+                self._next_rid += 1
+                self._results[rid] = RequestResult(
+                    rid=rid, prompt_len=int(prompt.size), tokens=[],
+                    finish_reason="rejected", admitted_tick=-1,
+                    finished_tick=self._tick_count, error=why)
+                return rid
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(rid=rid, prompt=prompt, max_new=max_new,
@@ -238,6 +315,7 @@ class ServeScheduler:
         jax 0.4.37); report -1 per program if a future jax drops it rather
         than crash the serve loop."""
         def size(fn) -> int:
+            fn = getattr(fn, "jitted", fn)       # unwrap jit_sharded
             probe = getattr(fn, "_cache_size", None)
             return int(probe()) if callable(probe) else -1
         return {"prefill": size(self._prefill),

@@ -131,16 +131,121 @@ def test_submit_validation(setup):
     cfg, params, prompts = setup
     sched = ServeScheduler(cfg, params, max_slots=1, max_len=24,
                            buckets=(8, 16), tick_steps=2)
-    with pytest.raises(ValueError):
-        sched.submit(np.arange(17), max_new=2)        # exceeds largest bucket
-    with pytest.raises(ValueError):
-        sched.submit(prompts[0], max_new=64)          # overflows slot capacity
+    # oversized prompts/capacity overflows are REJECTED per-request (they
+    # used to raise, killing a live serve loop); caller bugs still raise
+    rid = sched.submit(np.arange(17), max_new=2)      # exceeds largest bucket
+    rid2 = sched.submit(prompts[0], max_new=64)       # overflows slot capacity
     with pytest.raises(ValueError):
         sched.submit(np.zeros((0,), np.int32), max_new=2)
+    with pytest.raises(ValueError):
+        sched.submit(prompts[0], max_new=0)
     with pytest.raises(ValueError):
         bucket_for(99, (8, 16))
     with pytest.raises(ValueError):
         ServeScheduler(cfg, params, max_slots=1, max_len=8, buckets=(16,))
+    with pytest.raises(ValueError):
+        ServeScheduler(cfg, params, max_slots=1, max_len=24, buckets=(8,),
+                       oversize="explode")
+    results = sched.run()
+    by_rid = {r.rid: r for r in results}
+    for r in (by_rid[rid], by_rid[rid2]):
+        assert r.finish_reason == "rejected" and r.tokens == []
+        assert r.admitted_tick == -1 and r.error
+    # oversize="raise" restores the historical behavior
+    strict = ServeScheduler(cfg, params, max_slots=1, max_len=24,
+                            buckets=(8, 16), tick_steps=2, oversize="raise")
+    with pytest.raises(ValueError):
+        strict.submit(np.arange(17), max_new=2)
+
+
+def test_oversized_prompt_does_not_abort_inflight(setup):
+    """Regression (ISSUE 3): one oversized prompt submitted mid-run must
+    yield a per-request error result while every normal request — including
+    ones already decoding — still finishes with exact parity tokens."""
+    cfg, params, prompts = setup
+    # NB not 6: test_serving_fused asserts its max_new=6 generate program
+    # never retraces, and _reference() here shares the process-global LRU
+    max_new = 11
+    sched = ServeScheduler(cfg, params, max_slots=2, max_len=64,
+                           buckets=(8, 16), tick_steps=2)
+    rids = [sched.submit(p, max_new=max_new) for p in prompts[:3]]
+    sched.step_tick()                                 # requests now in flight
+    big = sched.submit(np.arange(40, dtype=np.int32), max_new=max_new)
+    rids += [sched.submit(p, max_new=max_new) for p in prompts[3:]]
+    results = sched.run()
+    assert len(results) == len(prompts) + 1
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[big].finish_reason == "rejected"
+    assert by_rid[big].tokens == [] and "bucket" in by_rid[big].error
+    for rid, p in zip(rids, prompts):
+        r = by_rid[rid]
+        assert r.finish_reason == "length"
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), _reference(cfg, params, p, max_new))
+
+
+def test_oversize_truncate_policy(setup):
+    """oversize="truncate" keeps the most recent tokens that fit and decodes
+    exactly as if the truncated prompt had been submitted."""
+    cfg, params, _ = setup
+    sched = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                           buckets=(8, 16), tick_steps=2, oversize="truncate")
+    rng = np.random.default_rng(7)
+    long_prompt = rng.integers(0, cfg.vocab_size, size=25).astype(np.int32)
+    rid = sched.submit(long_prompt, max_new=4)
+    (r,) = sched.run()
+    assert r.rid == rid and r.finish_reason == "length"
+    np.testing.assert_array_equal(
+        np.asarray(r.tokens), _reference(cfg, params, long_prompt[-16:], 4))
+
+
+# ---------------------------------------------------------------------------
+# bucket_for properties
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _check_bucket_invariants(length, buckets):
+    buckets_t = tuple(buckets)
+    fitting = [b for b in buckets_t if b >= length]
+    if not fitting:
+        with pytest.raises(ValueError):
+            bucket_for(length, buckets_t)
+        return
+    got = bucket_for(length, buckets_t)
+    assert got in buckets_t                       # a configured bucket
+    assert got >= length                          # the prompt fits
+    assert got == min(fitting)                    # ... in the SMALLEST one
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(length=st.integers(1, 300),
+           buckets=st.lists(st.integers(1, 256), min_size=1, max_size=8))
+    def test_bucket_for_properties(length, buckets):
+        _check_bucket_invariants(length, buckets)
+else:                                             # deterministic fallback
+    def test_bucket_for_properties():
+        rng = np.random.default_rng(42)
+        for _ in range(200):
+            buckets = rng.integers(1, 257,
+                                   size=int(rng.integers(1, 9))).tolist()
+            _check_bucket_invariants(int(rng.integers(1, 301)), buckets)
+
+
+def test_bucket_for_unsorted_and_boundaries():
+    """Order-independence and exact-boundary lengths."""
+    assert bucket_for(8, (16, 8, 64)) == 8        # exact boundary, unsorted
+    assert bucket_for(9, (64, 16, 8)) == 16
+    assert bucket_for(64, (64, 16, 8)) == 64
+    assert bucket_for(1, (8,)) == 8
+    with pytest.raises(ValueError):
+        bucket_for(65, (64, 16, 8))
 
 
 def test_scheduler_sizes_generate_cache(setup):
