@@ -1,4 +1,5 @@
-"""Continuous-batching serve benchmark: sustained tok/s + plane traffic
+"""Continuous-batching serve benchmark: sustained tok/s, per-request
+latency (TTFT + end-to-end p50/p95), per-tick latency, and plane traffic
 under a Poisson request trace.
 
 Compares the slot-pool scheduler (``serving/scheduler.py`` — admit /
@@ -11,23 +12,39 @@ pass runs the quantized bit-plane path with per-request
 ``plane_traffic_fraction`` / ``element_traffic_fraction`` reporting — the
 sustained-load image of the paper's §VI memory-access savings.
 
+The **chunked** variant (``serve_bench_chunked`` / ``--chunked``) is the
+ISSUE 4 A/B: the same heavy mixed trace (short interactive prompts +
+prompts at the largest bucket) replayed through monolithic bucketed
+prefill vs chunked prefill (``chunked="always"``), reporting the p95
+scheduler-tick latency both ways — the head-of-line stall a monolithic
+prefill inflicts on in-flight decodes, removed — plus a long-prompt trace
+(prompts past the largest bucket) that only the chunked scheduler can
+serve at all.
+
 The **sharded** variant (``serve_bench_sharded`` / ``--sharded``) replays
 the same trace through a mesh-native scheduler (``mesh='2x2'`` data x model
 by default) in a SUBPROCESS with forced host devices — the parent process
 keeps its single real device — and asserts token parity against the
-single-device scheduler before reporting throughput.
+single-device scheduler before reporting throughput; it also runs a
+chunked-``"auto"`` parity pass with over-bucket prompts.
 
   PYTHONPATH=src python -m benchmarks.serve_bench            # full bench
+  PYTHONPATH=src python -m benchmarks.serve_bench --chunked  # ISSUE 4 A/B
   PYTHONPATH=src python -m benchmarks.serve_bench --dry      # CI smoke
   PYTHONPATH=src python -m benchmarks.serve_bench --sharded  # mesh variant
   PYTHONPATH=src python -m benchmarks.run --only serve       # via driver
 
-Rows print as ``serve.<name>,<value>,`` CSV like every other bench.
+Rows print as ``serve.<name>,<value>,`` CSV like every other bench; each
+bench pass additionally emits ONE machine-readable ``# json {...}`` line
+(ignored by the CSV consumers) carrying the summary metrics and the
+per-request records (rid, prompt_len, ttft_s, e2e_s, finish_reason) — the
+artifact downstream dashboards ingest, smoke-validated in ``--dry`` CI.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import subprocess
 import sys
@@ -56,23 +73,84 @@ def _make_trace(rng, n_requests: int, vocab: int, min_len: int, max_len: int,
 
 def _run_scheduler(sched, trace, max_new: int, eos_id=None):
     """Replay the trace in wall-clock time (fast-forwarding idle gaps);
-    returns (results-so-far in rid order, elapsed_busy_seconds).  Every tick
-    syncs tokens to host, so the clock reads true device-done time."""
+    returns (results-so-far in rid order, elapsed_busy_seconds,
+    per-step_tick wall seconds).  Every tick syncs tokens to host, so the
+    clock reads true device-done time; a tick's duration includes the
+    admissions it performed — monolithic prefill stalls show up HERE."""
     pending = list(trace)
     t0 = time.perf_counter()
     idle = 0.0
+    tick_times: List[float] = []
     while pending or sched.pending:
         now = time.perf_counter() - t0 - idle
         while pending and pending[0][0] <= now:
             _, prompt = pending.pop(0)
             sched.submit(prompt, max_new=max_new, eos_id=eos_id)
         if sched.pending:
+            tt = time.perf_counter()
             sched.step_tick()
+            tick_times.append(time.perf_counter() - tt)
         elif pending:
             # fast-forward an empty system to the next arrival: idle time is
             # not "sustained load" and is excluded from the throughput
             idle += pending[0][0] - now
-    return sched.run(max_ticks=0), time.perf_counter() - t0 - idle
+    return (sched.run(max_ticks=0), time.perf_counter() - t0 - idle,
+            tick_times)
+
+
+def _pct(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def _request_records(results):
+    """Per-request latency records from the scheduler's result timestamps
+    (one time.perf_counter clock): ttft = queue wait + prefill up to the
+    first generated token; e2e = submit -> retirement."""
+    recs = []
+    for r in results:
+        recs.append({
+            "rid": r.rid, "prompt_len": r.prompt_len,
+            "finish_reason": r.finish_reason,
+            "ttft_s": (r.first_token_time - r.submit_time
+                       if np.isfinite(r.first_token_time) else float("nan")),
+            "e2e_s": (r.finish_time - r.submit_time
+                      if np.isfinite(r.finish_time) else float("nan")),
+        })
+    return recs
+
+
+def _latency_rows(prefix: str, results, tick_times):
+    """TTFT / end-to-end p50+p95 (ms) over SERVED requests (a rejected
+    request's ~0 s turnaround is finite and would deflate the e2e
+    percentiles) + p50/p95 per-scheduler-tick latency (ms) — the satellite
+    metrics next to tok/s."""
+    recs = _request_records(results)
+    served = [x for x in recs if x["finish_reason"] != "rejected"]
+    ttft = [x["ttft_s"] for x in served if np.isfinite(x["ttft_s"])]
+    e2e = [x["e2e_s"] for x in served if np.isfinite(x["e2e_s"])]
+    nan = float("nan")
+    return [
+        (f"{prefix}.ttft_p50_ms", _pct(ttft, 50) * 1e3, nan),
+        (f"{prefix}.ttft_p95_ms", _pct(ttft, 95) * 1e3, nan),
+        (f"{prefix}.e2e_p50_ms", _pct(e2e, 50) * 1e3, nan),
+        (f"{prefix}.e2e_p95_ms", _pct(e2e, 95) * 1e3, nan),
+        (f"{prefix}.tick_p50_ms", _pct(tick_times, 50) * 1e3, nan),
+        (f"{prefix}.tick_p95_ms", _pct(tick_times, 95) * 1e3, nan),
+    ], recs
+
+
+def _emit_json(bench: str, rows, recs=None) -> None:
+    """One machine-readable summary line per bench pass (CSV consumers skip
+    ``#`` lines).  json.dumps doubles as the serializability check that
+    ``--dry`` CI exercises."""
+    obj = {"bench": bench,
+           "rows": {name: (None if isinstance(val, float) and np.isnan(val)
+                           else float(val)) for name, val, _ in rows}}
+    if recs is not None:
+        obj["per_request"] = [
+            {k: (None if isinstance(v, float) and np.isnan(v) else v)
+             for k, v in r.items()} for r in recs]
+    print("# json " + json.dumps(obj))
 
 
 def _warm_trace(rng, buckets, vocab) -> List[Tuple[float, np.ndarray]]:
@@ -129,13 +207,16 @@ def serve_bench(arch: str = "smollm_135m", n_requests: int = 24,
                            max_len=pool_len, buckets=buckets,
                            tick_steps=tick_steps)
     _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size), max_new)
-    results, t_sched = _run_scheduler(sched, trace, max_new)
+    results, t_sched, ticks = _run_scheduler(sched, trace, max_new)
     got = sum(len(r.tokens) for r in results[-n_requests:])
     assert got == total_tokens, (got, total_tokens)
     rows.append((f"serve.{cfg.name}.sched_tok_s",
                  total_tokens / t_sched, nan))
     rows.append((f"serve.{cfg.name}.sched_vs_serial_speedup",
                  t_serial / t_sched, nan))
+    lat_rows, recs = _latency_rows(f"serve.{cfg.name}.sched",
+                                   results[-n_requests:], ticks)
+    rows += lat_rows
 
     # --- quantized pass with per-request traffic stats ---------------------
     qparams = quantize_model_params(cfg, params)
@@ -145,7 +226,7 @@ def serve_bench(arch: str = "smollm_135m", n_requests: int = 24,
                             tick_steps=tick_steps)
     _run_scheduler(qsched, _warm_trace(rng, buckets, cfg.vocab_size),
                    max_new)
-    qresults, t_q = _run_scheduler(qsched, trace, max_new)
+    qresults, t_q, _ = _run_scheduler(qsched, trace, max_new)
     qresults = qresults[-n_requests:]
     rows.append((f"serve.{cfg.name}.quant.sched_tok_s",
                  total_tokens / t_q, nan))
@@ -155,6 +236,86 @@ def serve_bench(arch: str = "smollm_135m", n_requests: int = 24,
     rows.append((f"serve.{cfg.name}.quant.plane_traffic_fraction_element",
                  float(np.mean([r.element_traffic_fraction
                                 for r in qresults])), nan))
+    _emit_json("serve", rows, recs)
+    return rows
+
+
+def serve_bench_chunked(arch: str = "smollm_135m", n_requests: int = 24,
+                        max_slots: int = 8, tick_steps: int = 8,
+                        max_new: int = 16, seed: int = 0,
+                        buckets: Tuple[int, ...] = (8, 16, 32)):
+    """ISSUE 4 A/B: heavy mixed traffic (half short interactive prompts,
+    half at the largest bucket) through monolithic bucketed prefill vs
+    chunked prefill, p95 scheduler-tick latency head to head — then a
+    long-prompt trace (up to 3x the largest bucket) that monolithic prefill
+    would reject outright, served chunked, with TTFT/e2e percentiles."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.serving.scheduler import ServeScheduler, round_pool_len
+
+    cfg = get_smoke(arch).replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    chunk_len = buckets[0]
+    long_max = 3 * max(buckets)
+    pool_len = round_pool_len(long_max + max_new + tick_steps, chunk_len)
+    nan = float("nan")
+    rows = []
+
+    # --- A/B: same in-bucket heavy-mix trace, monolithic vs chunked --------
+    # (in-bucket so BOTH sides can serve it; half the prompts sit at the
+    # largest bucket — each monolithic admission stalls every decode slot
+    # for a full bucket prefill, the chunked side ingests chunk_len/tick)
+    mix = []
+    for i in range(n_requests):
+        n = (max(buckets) if i % 2 == 0
+             else int(rng.integers(4, buckets[0] + 1)))
+        mix.append((0.0, rng.integers(0, cfg.vocab_size,
+                                      size=n).astype(np.int32)))
+    warm = _warm_trace(rng, buckets, cfg.vocab_size)
+    p95 = {}
+    for label, kw in (("mono", {}), ("chunked", {"chunked": "always"})):
+        sched = ServeScheduler(cfg, params, max_slots=max_slots,
+                               max_len=pool_len, buckets=buckets,
+                               tick_steps=tick_steps, **kw)
+        _run_scheduler(sched, warm, max_new)
+        results, t, ticks = _run_scheduler(sched, mix, max_new)
+        results = results[-n_requests:]
+        total = sum(len(r.tokens) for r in results)
+        rows.append((f"serve.{cfg.name}.chunk_ab[{label}].tok_s",
+                     total / t, nan))
+        lat, _ = _latency_rows(f"serve.{cfg.name}.chunk_ab[{label}]",
+                               results, ticks)
+        rows += lat
+        p95[label] = _pct(ticks, 95)
+    rows.append((f"serve.{cfg.name}.chunk_ab.p95_tick_speedup",
+                 p95["mono"] / p95["chunked"], nan))
+
+    # --- long prompts: beyond every bucket, serveable only chunked ---------
+    longs = [(0.0, rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(max(buckets) + 1,
+                                                      long_max + 1)),
+                                ).astype(np.int32))
+             for _ in range(max(2, n_requests // 3))]
+    sched = ServeScheduler(cfg, params, max_slots=max_slots,
+                           max_len=pool_len, buckets=buckets,
+                           tick_steps=tick_steps, chunked="auto")
+    _run_scheduler(sched, warm + longs[:1], max_new)
+    results, t, ticks = _run_scheduler(sched, longs, max_new)
+    results = results[-len(longs):]
+    served = [r for r in results if r.finish_reason == "length"]
+    assert len(served) == len(longs), \
+        [r.finish_reason for r in results]      # no rejections: the point
+    rows.append((f"serve.{cfg.name}.long.served_frac",
+                 len(served) / len(longs), nan))
+    rows.append((f"serve.{cfg.name}.long.tok_s",
+                 sum(len(r.tokens) for r in served) / t, nan))
+    lat, recs = _latency_rows(f"serve.{cfg.name}.long", results, ticks)
+    rows += lat
+    _emit_json("serve_chunked", rows, recs)
     return rows
 
 
@@ -179,6 +340,15 @@ def _sharded_child(arch: str, n_requests: int, max_slots: int,
                         min_len=4, max_len=max(buckets), rate=0.0)
     rows = []
     tokens = {}
+    chunk_tokens = {}
+    # over-bucket prompts for the chunked parity leg (monolithic rejects
+    # them; the chunked scheduler must serve them identically on a mesh)
+    chunk_trace = trace[: max(2, n_requests // 4)] + [
+        (0.0, rng.integers(0, cfg.vocab_size,
+                           size=2 * max(buckets)).astype(np.int32))]
+    from repro.serving.scheduler import round_pool_len
+    chunk_pool = round_pool_len(2 * max(buckets) + max_new + tick_steps,
+                                buckets[0])
     for label, mesh in (("single", None),
                         (mesh_spec, make_serve_mesh(mesh_spec))):
         from repro.serving.scheduler import ServeScheduler
@@ -187,13 +357,24 @@ def _sharded_child(arch: str, n_requests: int, max_slots: int,
                                tick_steps=tick_steps, mesh=mesh)
         _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size),
                        max_new)
-        results, t = _run_scheduler(sched, trace, max_new)
+        results, t, _ = _run_scheduler(sched, trace, max_new)
         tokens[label] = [r.tokens for r in results[-n_requests:]]
         rows.append((f"serve.{cfg.name}.sharded[{label}].tok_s",
                      n_requests * max_new / t, float("nan")))
+        csched = ServeScheduler(cfg, params, max_slots=max_slots,
+                                max_len=chunk_pool, buckets=buckets,
+                                tick_steps=tick_steps, mesh=mesh,
+                                chunked="auto")
+        cresults, _, _ = _run_scheduler(csched, chunk_trace, max_new)
+        assert all(r.finish_reason == "length" for r in cresults), cresults
+        chunk_tokens[label] = [r.tokens for r in cresults]
     assert tokens["single"] == tokens[mesh_spec], \
         "sharded scheduler tokens diverged from single-device"
     rows.append((f"serve.{cfg.name}.sharded[{mesh_spec}].bit_equal",
+                 1.0, float("nan")))
+    assert chunk_tokens["single"] == chunk_tokens[mesh_spec], \
+        "sharded CHUNKED scheduler tokens diverged from single-device"
+    rows.append((f"serve.{cfg.name}.sharded[{mesh_spec}].chunked_bit_equal",
                  1.0, float("nan")))
     return rows
 
@@ -234,7 +415,9 @@ def serve_bench_sharded(arch: str = "smollm_135m", n_requests: int = 16,
     return rows
 
 
-ALL_SERVE_BENCHES = {"serve": serve_bench, "serve_sharded": serve_bench_sharded}
+ALL_SERVE_BENCHES = {"serve": serve_bench,
+                     "serve_chunked": serve_bench_chunked,
+                     "serve_sharded": serve_bench_sharded}
 
 
 def main(argv=None) -> None:
@@ -250,8 +433,12 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dry", action="store_true",
                     help="CI smoke: tiny trace, checks wiring + that the "
-                         "scheduler runs end-to-end (single-device AND a "
-                         "2x2 sharded pass)")
+                         "scheduler runs end-to-end (single-device, chunked "
+                         "A/B + long prompts, AND a 2x2 sharded pass incl. "
+                         "chunked parity), and validates the # json rows")
+    ap.add_argument("--chunked", action="store_true",
+                    help="run the chunked-prefill A/B (monolithic vs "
+                         "chunked p95 tick latency + long-prompt trace)")
     ap.add_argument("--sharded", action="store_true",
                     help="run the mesh-sharded variant (subprocess with "
                          "forced host devices)")
@@ -276,10 +463,26 @@ def main(argv=None) -> None:
         rows = serve_bench(args.arch, n_requests=4, max_slots=2,
                            tick_steps=2, max_new=4, rate=args.rate,
                            seed=args.seed, buckets=(8, 16))
+        rows += serve_bench_chunked(args.arch, n_requests=4, max_slots=2,
+                                    tick_steps=2, max_new=4, seed=args.seed,
+                                    buckets=(8, 16))
         rows += serve_bench_sharded(args.arch, n_requests=4, max_slots=2,
                                     tick_steps=2, max_new=4, seed=args.seed,
                                     buckets=(8, 16), mesh_spec=args.mesh,
                                     devices=args.devices)
+        # the --dry contract: the latency satellites exist in the emitted
+        # rows (CI drift check for the TTFT/p95 reporting)
+        names = [n for n, _, _ in rows]
+        for want in ("ttft_p50_ms", "ttft_p95_ms", "e2e_p50_ms",
+                     "e2e_p95_ms", "tick_p95_ms", "p95_tick_speedup",
+                     "long.served_frac", "chunked_bit_equal"):
+            assert any(want in n for n in names), (want, names)
+    elif args.chunked:
+        rows = serve_bench_chunked(args.arch, n_requests=args.requests,
+                                   max_slots=args.max_slots,
+                                   tick_steps=args.tick_steps,
+                                   max_new=args.new_tokens, seed=args.seed,
+                                   buckets=buckets)
     elif args.sharded:
         rows = serve_bench_sharded(args.arch, n_requests=args.requests,
                                    max_slots=args.max_slots,

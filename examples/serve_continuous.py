@@ -13,6 +13,12 @@ under sustained multi-request load.
   PYTHONPATH=src python examples/serve_continuous.py
   PYTHONPATH=src python examples/serve_continuous.py --arch mamba2-780m
   PYTHONPATH=src python examples/serve_continuous.py --quant --backend xla
+  PYTHONPATH=src python examples/serve_continuous.py --chunked   # long prompts
+
+``--chunked`` enables chunked prefill (ISSUE 4): the request mix draws
+prompts up to 120 tokens — past the largest (64) bucket, a hard rejection
+without chunking — and ingests them chunk-by-chunk across ticks while the
+other slots keep decoding; parity vs ``greedy_generate`` still holds.
 
 ``--mesh DxM`` serves tensor/data-parallel over a host-device mesh (pool
 batch-sharded on ``data``, weights TP on ``model``); the per-request parity
@@ -57,6 +63,11 @@ def main():
                          "serving; default single-device")
     ap.add_argument("--host-devices", type=int, default=None,
                     help="force N host devices (see module docstring)")
+    ap.add_argument("--chunked", nargs="?", const="auto", default="off",
+                    choices=["off", "auto", "always"],
+                    help="chunked prefill: the request mix adds prompts "
+                         "past the largest bucket (up to 120 tokens), "
+                         "ingested chunk-by-chunk interleaved with decode")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,15 +78,21 @@ def main():
     quant = args.backend if args.quant else False
     mesh = make_serve_mesh(args.mesh) if args.mesh else None
 
+    from repro.serving.scheduler import round_pool_len
+    long_max = 120 if args.chunked != "off" else 32
+    pool = round_pool_len(
+        max(64, long_max) + args.new_tokens + args.tick_steps, 8)
     sched = ServeScheduler(cfg, params, max_slots=args.max_slots,
-                           max_len=64 + args.new_tokens,
+                           max_len=pool,
                            buckets=(8, 16, 32, 64), quant=quant,
                            with_stats=args.quant,
-                           tick_steps=args.tick_steps, mesh=mesh)
+                           tick_steps=args.tick_steps, mesh=mesh,
+                           chunked=args.chunked)
 
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size,
-                            size=int(rng.integers(3, 33))).astype(np.int32)
+                            size=int(rng.integers(3, long_max + 1))
+                            ).astype(np.int32)
                for _ in range(args.requests)]
     for p in prompts:
         sched.submit(p, max_new=args.new_tokens)

@@ -1,8 +1,13 @@
 """Bit-plane weight storage — QeiHaN paper §IV-B (Fig. 7).
 
-The ASIC stores bit ``b`` of a group of weights in DRAM bank ``b`` so the
-vault controller can fetch only the MSB planes demanded by a negative
-activation exponent.  The TPU-native analogue implemented here:
+Paper mapping (arXiv 2310.18181; DESIGN.md "Paper ↔ code map"): this module
+is the paper's *implicit in-memory bit-shifting of the DNN weights* — the
+§IV-B weight storage scheme.  The ASIC stores bit ``b`` of a group of
+weights in DRAM bank ``b`` so the vault controller can fetch only the MSB
+planes demanded by a negative activation exponent ("only the meaningful
+bits of the weights required for the bit-shift operation are accessed");
+the shift itself never executes — dropping low planes IS the shift (see
+the semantics note below).  The TPU-native analogue implemented here:
 
 * :func:`to_bitplanes` — two's-complement decomposition of an int8 weight
   tensor into 8 ``{0,1}`` planes, **plane-major** so each plane is a

@@ -1,5 +1,14 @@
 """LOG2 (logarithmic base-2) activation quantization — QeiHaN paper Eqs. 2-4.
 
+Paper mapping (arXiv 2310.18181; DESIGN.md "Paper ↔ code map"): this module
+is the paper's *log2 activation quantization* — §II's observation that
+FC/CONV activations concentrate in (-1, 1) and so quantize to powers of two
+with mostly NEGATIVE exponents (Fig. 2), encoded via Eqs. 2-4 with the
+Fig. 5 single-comparator rounding circuit.  Those negative exponents are
+what the weight side (``core/bitplane.py``, §IV-B) turns into skipped
+memory accesses; the Pallas realization of this quantizer is
+``kernels/log2quant/``.
+
 Implements two bit-identical paths:
 
 * :func:`log2_quantize` — production path.  Extracts the IEEE-754 exponent

@@ -1,5 +1,14 @@
 """The QeiHaN shift-add dot product — paper Eq. 5 — in three equal forms.
 
+Paper mapping (arXiv 2310.18181; DESIGN.md "Paper ↔ code map"): this module
+is the paper's §IV D&S (decode-and-shift) unit datapath — the compute side
+of the *implicit bit-shift weight access*: Eq. 5's
+``y = sum_i sign_i * ArithShift(w_i, e_i)`` over log2-quantized activations
+(``core/logquant.py``, §II/Eqs. 2-4) and bit-plane-stored weights
+(``core/bitplane.py``, §IV-B).  The plane-skipping Pallas kernel
+(``kernels/bitplane_matmul/``) executes form (2) below with the skipped
+fetches made explicit.
+
 Semantics.  An activation quantizes to ``s * 2^e`` (``core.logquant``), a
 weight to int8 ``w`` (``core.wquant``).  The D&S unit produces
 

@@ -1,7 +1,11 @@
 """Pallas kernel: QeiHaN bit-plane shift-add matmul with plane skipping.
 
-TPU-native realization of the paper's §IV (D&S unit + bit-plane DRAM layout).
-Computes, exactly in integers,
+Paper mapping (arXiv 2310.18181; DESIGN.md "Paper ↔ code map"): TPU-native
+realization of the paper's §IV — the D&S unit's Eq. 5 shift-add
+(``core/shiftadd.py``) fused with the §IV-B *implicit bit-shift weight
+access*: the scalar-prefetched skip table below is the vault controller
+deciding, per tile, which weight bit-planes a negative log2 activation
+exponent (§II, Eqs. 2-4) makes it skip.  Computes, exactly in integers,
 
     y[m, n] = sum_k  sign[m,k] * ArithShift(w[k,n], exp[m,k])
 

@@ -1,5 +1,10 @@
 """Pallas kernel: LOG2 activation quantization (paper Fig. 5, Eqs. 6-7).
 
+Paper mapping (arXiv 2310.18181; DESIGN.md "Paper ↔ code map"): the
+kernel-side twin of ``core/logquant.py`` — the paper's §II log2 activation
+quantization, evaluated as the Fig. 5 comparator circuit (Eqs. 6-7 fold
+the Eq. 3 rounding into one exponent-field add + mantissa compare).
+
 Elementwise over a 2D tensor, tiled ``(block_m, block_n)`` in VMEM.  The body
 is the same comparator circuit as ``core.logquant.log2_quantize``: IEEE-754
 exponent-field extraction plus one mantissa-vs-sqrt(2) compare — no

@@ -51,22 +51,32 @@ from repro.serving.engine import make_decode_loop, make_prefill_step
 
 def _serve_continuous(cfg, params, args, mesh):
     """Queued-trace continuous batching: submit everything, drain, report
-    sustained tok/s + per-request plane traffic."""
+    sustained tok/s + per-request latency + plane traffic.
+
+    With ``--chunked`` the trace includes LONG prompts (up to 3x
+    ``--prompt-len``, past every prefill bucket) — rejected outright without
+    chunking — ingested ``--chunk-len`` tokens per tick, interleaved with
+    decode."""
     import numpy as np
 
-    from repro.serving.scheduler import ServeScheduler
+    from repro.serving.scheduler import ServeScheduler, round_pool_len
 
     quant = args.quant_backend if args.quant else False
     buckets = tuple(sorted({8, 16, max(8, args.prompt_len)}))
+    chunked = args.chunked or "off"
+    chunk_len = args.chunk_len or 8
+    long_max = (3 * args.prompt_len) if chunked != "off" else args.prompt_len
+    pool = max(long_max, max(buckets)) + args.new_tokens + args.tick_steps
+    if chunked != "off":
+        pool = round_pool_len(pool, chunk_len)
     sched = ServeScheduler(
-        cfg, params, max_slots=args.max_slots,
-        max_len=max(buckets) + args.new_tokens + args.tick_steps,
+        cfg, params, max_slots=args.max_slots, max_len=pool,
         buckets=buckets, quant=quant, with_stats=args.quant,
-        tick_steps=args.tick_steps,
+        tick_steps=args.tick_steps, chunked=chunked, chunk_len=chunk_len,
         mesh=mesh if mesh is not None and mesh.size > 1 else None)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
-        n = int(rng.integers(2, args.prompt_len + 1))
+        n = int(rng.integers(2, long_max + 1))
         sched.submit(rng.integers(0, cfg.vocab_size, size=n),
                      max_new=args.new_tokens, eos_id=args.eos_id)
     t0 = time.perf_counter()
@@ -75,16 +85,32 @@ def _serve_continuous(cfg, params, args, mesh):
     total = sum(len(r.tokens) for r in results)
     mesh_tag = ("1-device" if sched.mesh is None else
                 "x".join(str(s) for s in sched.mesh.devices.shape) + " mesh")
-    print(f"[serve] {cfg.name}: continuous batching ({mesh_tag}) — "
-          f"{len(results)} requests, {sched.max_slots} slots, "
+    chunk_tag = ("" if chunked == "off"
+                 else f", chunked={chunked}/{sched.chunk_len}")
+    print(f"[serve] {cfg.name}: continuous batching ({mesh_tag}{chunk_tag}) "
+          f"— {len(results)} requests, {sched.max_slots} slots, "
           f"tick={sched.tick_steps}: "
           f"{total} tokens in {dt:.3f}s ({total / max(dt, 1e-9):.1f} tok/s "
           f"incl. compile); programs: {sched.compile_stats()}")
     if not results:
         return
+    served = [r for r in results if r.finish_reason != "rejected"]
+    ttft = [r.first_token_time - r.submit_time for r in served
+            if np.isfinite(r.first_token_time)]
+    e2e = [r.finish_time - r.submit_time for r in served
+           if np.isfinite(r.finish_time)]
+    if ttft:
+        print(f"[serve] latency (incl. compile): ttft p50/p95 "
+              f"{np.percentile(ttft, 50) * 1e3:.1f}/"
+              f"{np.percentile(ttft, 95) * 1e3:.1f} ms, e2e p50/p95 "
+              f"{np.percentile(e2e, 50) * 1e3:.1f}/"
+              f"{np.percentile(e2e, 95) * 1e3:.1f} ms; "
+              f"{len(served)}/{len(results)} served, longest prompt "
+              f"{max(r.prompt_len for r in served)} tokens "
+              f"(buckets cap {max(buckets)})")
     if args.quant:
-        tile = float(np.mean([r.plane_traffic_fraction for r in results]))
-        elem = float(np.mean([r.element_traffic_fraction for r in results]))
+        tile = float(np.mean([r.plane_traffic_fraction for r in served]))
+        elem = float(np.mean([r.element_traffic_fraction for r in served]))
         print(f"[serve] per-request plane_traffic_fraction: {tile:.3f} "
               f"tile-granular, {elem:.3f} element-granular")
     r0 = results[0]
@@ -122,6 +148,17 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--tick-steps", type=int, default=8)
+    ap.add_argument("--chunked", nargs="?", const="auto", default=None,
+                    choices=["off", "auto", "always"],
+                    help="chunked prefill (continuous mode): ingest prompts "
+                         "chunk-by-chunk interleaved with decode; lifts the "
+                         "bucket ceiling on prompt length, and the trace "
+                         "draws prompts up to 3x --prompt-len.  Bare "
+                         "--chunked means 'auto' (only over-bucket prompts "
+                         "chunk); 'always' chunks every prompt")
+    ap.add_argument("--chunk-len", type=int, default=None,
+                    help="tokens ingested per chunk per tick (default 8, "
+                         "the smallest bucket)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)

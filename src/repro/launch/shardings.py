@@ -253,7 +253,13 @@ def serve_shardings(mesh: Mesh, params_tree: Any, caches_tree: Any, *,
       ``cache_shardings``).
     * ``logits``  — (B, V) decode carry: batch on ``data``, vocab replicated
       (the greedy argmax stays a local per-row reduction).
-    * ``tokens`` / ``active`` — per-slot (B, ...) vectors on ``data``.
+    * ``tokens`` / ``active`` — per-slot (B, ...) arrays on ``data``.
+      ``tokens`` is any per-slot token slab — the (B, 1) decode token AND
+      the chunked-prefill (B, chunk_len) chunk slab (the slab's row lands
+      on the device holding that slot's cache rows, so the chunk write
+      stays local); ``active`` likewise covers every (B,) host-built flag
+      vector (the decode-active mask and the chunked ``chunk_valid`` /
+      ``fresh`` / ``finishing`` vectors).
     * ``replicated`` — the catch-all for host-supplied scalars.
     """
     from repro.launch.mesh import batch_axes

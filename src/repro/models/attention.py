@@ -10,6 +10,10 @@ G = kv heads and R = group size, so KV is *never* materialized repeated
 * ``_decode_attention`` — single-token path: one masked einsum over the
   cache.  With the cache sequence-sharded on the TP axis the partial scores
   stay local and XLA inserts only tiny (B, G, R) softmax-stat collectives.
+* ``_chunk_attention`` — chunked-prefill path (``attention(chunk_valid=)``):
+  S chunk queries against the cache, same masked-einsum form as decode —
+  mid-prompt chunks must see earlier chunks' K/V, which live in the cache,
+  not in the fresh projections.
 """
 
 from __future__ import annotations
@@ -175,6 +179,39 @@ def _make_flash(causal: bool, kv_chunk: int, has_valid: bool):
     return flash
 
 
+def _chunk_attention(q, k, v, q_positions, kv_positions, kv_valid_len):
+    """q: (B, S, H, D) chunk queries against the full cache — the S-query
+    generalization of :func:`_decode_attention`: one masked einsum + one
+    softmax, no online chunking.
+
+    Used by the chunked-prefill path, where queries must see *cache* rows
+    (earlier chunks) and not just the fresh chunk K/V.  Like the decode path
+    — and unlike ``flash_attention``, whose KV-chunk reshape would split the
+    sequence axis (the documented CPU-SPMD hazard under a seq-sharded
+    cache) — the scores stay shard-local and only softmax-normalization
+    collectives cross shards.  Materializes (B, H, S, K) f32 scores: bounded
+    by chunk_len x pool max_len, fine at serve-pool sizes (a flash-style
+    online variant is the long-context follow-up).
+    """
+    b, sq, h, d = q.shape
+    g = k.shape[2]
+    qg = _grouped(q, g)                                  # (B, S, G, R, D)
+    s = jnp.einsum("bsgrd,bkgd->bgrsk", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    mask = (kv_positions[:, None, None, None, :]
+            <= q_positions[:, None, None, :, None])
+    if kv_valid_len is not None:
+        idx = jnp.arange(k.shape[1])
+        mask = mask & (idx[None, None, None, None, :]
+                       < kv_valid_len[:, None, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrsk,bkgd->bsgrd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
 def _decode_attention(q, k, v, q_positions, kv_positions, kv_valid_len):
     """q: (B, 1, H, D) against the full cache — single masked einsum."""
     b, _, h, d = q.shape
@@ -212,12 +249,23 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
 
 
 def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
-              cache: Optional[KVCache] = None, quant=False):
+              cache: Optional[KVCache] = None, quant=False,
+              chunk_valid: Optional[jnp.ndarray] = None):
     """Full GQA block body (pre-norm residual handled by caller).
 
     Returns ``(attn_out, new_cache)``.  With ``cache`` given, ``x`` is the
     new-token slice (decode: S=1) appended at ``cache.length``.  ``quant``
     (bool | str | QuantCtx) routes QKV/O through the QeiHaN path.
+
+    ``chunk_valid`` (``(B,)``, chunked prefill only) switches the
+    prefill-with-cache path from "cache assumed empty" to *mid-prompt chunk*
+    semantics: ``x`` is one right-padded chunk of a longer prompt whose
+    earlier chunks already live in the cache.  Per row, only the first
+    ``chunk_valid[b]`` slab positions are real — only those K/V rows are
+    written (pad positions write back the cache's own bytes, an exact no-op)
+    — and queries attend over the *cache* (earlier chunks + this one) under
+    the causal mask with junk rows beyond ``length + chunk_valid`` masked by
+    ``kv_valid_len``, instead of over the fresh chunk K/V alone.
     """
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -249,6 +297,33 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
         out = flash_attention(q, k, v, positions, positions, causal=True,
                               kv_chunk=cfg.kv_chunk)
         new_cache = None
+    elif chunk_valid is not None:
+        # chunked prefill: write ONLY the real slab rows (pad positions
+        # write the cache's own bytes back — an exact no-op, so a decode /
+        # free row riding along with chunk_valid == 0 leaves its cache
+        # untouched), then attend over the cache: earlier chunks are already
+        # resident and this chunk was just appended.  Cache row i holds the
+        # token at position i, so the causal mask is plain kv_pos <= q_pos
+        # and kv_valid_len hides junk rows beyond each row's new length.
+        idx = jnp.broadcast_to(cache.length, (b,))
+
+        def chunk_upd(c, n, i, keep_r):
+            cur = jax.lax.dynamic_slice_in_dim(c, i, n.shape[0], axis=0)
+            slab = jnp.where(keep_r[:, None, None], n, cur)
+            return jax.lax.dynamic_update_slice_in_dim(c, slab, i, axis=0)
+
+        keep = jnp.arange(s, dtype=jnp.int32)[None, :] < chunk_valid[:, None]
+        row_upd = jax.vmap(chunk_upd)
+        kc = row_upd(cache.k, k.astype(cache.k.dtype), idx, keep)
+        vc = row_upd(cache.v, v.astype(cache.v.dtype), idx, keep)
+        kc = shard(kc, "cache")
+        vc = shard(vc, "cache")
+        new_len = idx + chunk_valid
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(kc.shape[1], dtype=jnp.int32), (b, kc.shape[1]))
+        out = _chunk_attention(q, kc, vc, positions, kv_pos,
+                               kv_valid_len=new_len)
+        new_cache = KVCache(k=kc, v=vc, length=new_len)
     else:
         idx = cache.length
         if getattr(idx, "ndim", 0):

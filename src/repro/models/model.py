@@ -246,7 +246,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
-                 cache, cache_len, quant, valid_len=None):
+                 cache, cache_len, quant, valid_len=None, chunk_valid=None):
     base = kind.split("_")[0]
     is_moe = kind.endswith("_moe")
     x = shard(x, "btd")                     # keep the scan carry SP-sharded
@@ -254,13 +254,19 @@ def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
     if base == "attn":
         kv = None if cache is None else KVCache(
             k=cache["k"], v=cache["v"], length=cache_len)
-        out, new_kv = attention(p, h, positions, cfg, cache=kv, quant=quant)
+        out, new_kv = attention(p, h, positions, cfg, cache=kv, quant=quant,
+                                chunk_valid=chunk_valid)
         new_cache = None if new_kv is None else {"k": new_kv.k, "v": new_kv.v}
     else:
         st = None if cache is None else ssd_lib.SSMState(
             ssm=cache["ssm"], conv=cache["conv"])
-        out, new_st = ssd_lib.mamba2_block(p, h, cfg, state=st, quant=quant,
-                                           valid_len=valid_len)
+        # a chunk's per-row valid count doubles as the SSM pad mask: pad
+        # tokens get dt = 0 (state passes through untouched) and the rolling
+        # conv window re-anchors at the real-token boundary — the same
+        # masking bucketed prefill uses, applied mid-prompt
+        out, new_st = ssd_lib.mamba2_block(
+            p, h, cfg, state=st, quant=quant,
+            valid_len=chunk_valid if chunk_valid is not None else valid_len)
         new_cache = None if new_st is None else {
             "ssm": new_st.ssm, "conv": new_st.conv}
     # hint the projection output to the residual sharding *before* the add so
@@ -287,7 +293,8 @@ def forward(cfg: ModelConfig, params: Params, *,
             caches: Optional[Params] = None,
             quant=False,
             return_stats: bool = False,
-            valid_len: Optional[jnp.ndarray] = None):
+            valid_len: Optional[jnp.ndarray] = None,
+            chunk_valid: Optional[jnp.ndarray] = None):
     """Returns (logits, new_caches). ``caches`` enables decode/prefill mode.
 
     ``quant`` (bool | str | QuantCtx) routes eligible projections through the
@@ -304,7 +311,23 @@ def forward(cfg: ModelConfig, params: Params, *,
     input as right-padding: SSM state/conv updates are masked so pad tokens
     neither decay nor feed the recurrent state (attention needs no mask —
     pads sit at causal positions after every real token).
+
+    ``chunk_valid`` (``(B,)``, chunked prefill) marks the input as one
+    right-padded *mid-prompt chunk* per row: earlier chunks already live in
+    the caches, so attention writes only the real slab rows and attends over
+    the cache (``models.attention`` chunk path), the SSM path applies the
+    same ``valid_len`` pad masking, and the cache ``length`` advances by
+    ``chunk_valid`` — not by the padded slab width ``s``.  A row with
+    ``chunk_valid[b] == 0`` passes through the call with its cache
+    bit-identical (decode/free slots ride along in the serve scheduler's
+    mixed tick).  Mutually exclusive with ``valid_len``.
     """
+    if valid_len is not None and chunk_valid is not None:
+        raise ValueError("pass either valid_len (bucketed prefill) or "
+                         "chunk_valid (chunked prefill), not both")
+    if chunk_valid is not None and caches is None:
+        raise ValueError("chunk_valid requires caches: a chunk appends to "
+                         "resident earlier chunks")
     ctx = as_quant_ctx(quant)
     if embeds is not None:                       # audio stub: direct embeddings
         x = embeds.astype(cfg.dtype)
@@ -337,7 +360,8 @@ def forward(cfg: ModelConfig, params: Params, *,
         for i, kind in enumerate(cfg.pattern):
             c_i = None if lc is None else lc[i]
             x, nc = _apply_block(cfg, kind, lp[i], x, positions, c_i,
-                                 cache_len, bctx, valid_len=valid_len)
+                                 cache_len, bctx, valid_len=valid_len,
+                                 chunk_valid=chunk_valid)
             new_cs.append(nc)
         traffic = None
         if return_stats:
@@ -370,8 +394,11 @@ def forward(cfg: ModelConfig, params: Params, *,
             return body(x, xs)
         x, (new_layer_caches, traffic) = jax.lax.scan(
             scan_body, x, (params["blocks"], layer_caches))
+        # a chunk advances each row by its REAL token count, not the padded
+        # slab width (chunk_valid == 0 rows stay put entirely)
         new_caches = {"layers": new_layer_caches,
-                      "length": cache_len + s}
+                      "length": cache_len + (s if chunk_valid is None
+                                             else chunk_valid)}
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

@@ -133,10 +133,16 @@ def mamba2_block(p, x: jnp.ndarray, cfg,
                  valid_len: Optional[jnp.ndarray] = None):
     """x: (B, S, d_model) -> (y, new_state).  Decode when ``state`` given.
 
-    ``valid_len`` (B,) masks right-padding (bucketed prefill): pad tokens get
-    ``dt = 0`` — decay ``exp(0) = 1`` and input contribution ``x * dt = 0``,
-    so the recurrent state passes through them untouched — and the rolling
-    conv window is sliced per row at the real-token boundary."""
+    ``valid_len`` (B,) masks right-padding: pad tokens get ``dt = 0`` —
+    decay ``exp(0) = 1`` and input contribution ``x * dt = 0``, so the
+    recurrent state passes through them untouched — and the rolling conv
+    window is sliced per row at the real-token boundary (``_window_at``).
+    Two callers rely on it: bucketed prefill (one right-padded prompt into
+    a fresh state) and chunked prefill (``forward(chunk_valid=...)``) —
+    there the SAME masking runs mid-prompt, chunk by chunk, with the
+    incoming state seeding the chunked dual form below; a ``valid_len[b]
+    == 0`` row (a decode/free slot riding a chunk tick) passes through
+    with state and conv window bit-identical."""
     bsz, s, _ = x.shape
     h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     d_inner = h * pdim

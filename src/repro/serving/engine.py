@@ -16,6 +16,12 @@ reports the per-step ``plane_traffic_fraction`` (the fraction of weight-plane
 tiles the kernel actually fetches: the decode-time image of the paper's §VI
 memory-access savings).
 
+Slot-pool serving (``serving/scheduler.py``) builds on the per-slot step
+builders: ``make_slot_prefill`` (bucketed right-padded prefill),
+``make_slot_prefill_chunk`` (chunked prefill — one fixed-shape prompt chunk
+per prefilling slot written straight into the pool, DESIGN.md §Chunked
+prefill), and ``make_slot_serve_step`` (slot-masked decode).
+
 Every step builder is **mesh-native**: pass ``mesh=`` (plus optional
 ``in_shardings`` / ``out_shardings`` pytrees) and the returned callable is
 jitted with those shardings and traced under the model's activation-sharding
@@ -150,6 +156,31 @@ def make_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
     return _maybe_shard(serve_step, mesh, in_shardings, out_shardings)
 
 
+def _mask_recurrent_rows(layers, prev_layers, rows):
+    """Per-row select over the SSM/conv *recurrent* leaves of a stacked
+    cache ``layers`` tuple: rows where ``rows`` is False revert their
+    ssm/conv state to ``prev_layers``'s; everything else (attention KV —
+    offset writes, masked and overwritten, never carried) passes through
+    from ``layers``.
+
+    A recurrence carries — junk tokens fed to a masked row would compound
+    into its state — so every slot-pool step that advances state through
+    rows that must NOT move (inactive slots in the decode tick, non-fresh
+    rows in the chunk reset) routes through this one helper: leaf layout
+    is (R, B, ...trailing) and the row mask broadcasts over repeats and
+    whatever trails, so a cache-layout change lands in exactly one place.
+    """
+    out = []
+    for c_new, c_old in zip(layers, prev_layers):
+        if "ssm" in c_new:
+            out.append({k: jnp.where(
+                rows.reshape((1, -1) + (1,) * (c_new[k].ndim - 2)),
+                c_new[k], c_old[k]) for k in c_new})
+        else:
+            out.append(c_new)
+    return tuple(out)
+
+
 def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
                          with_stats: bool = False, *,
                          mesh=None, in_shardings=None, out_shardings=None):
@@ -158,13 +189,19 @@ def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
     (``serving/scheduler.py``).
 
     The batch shape is the fixed slot pool, so *every* row computes each
-    step; ``active`` masks the bookkeeping — an inactive (free / retired)
-    slot's cache ``length`` does not advance, so whatever junk it decodes
-    leaves no trace once the slot is re-admitted (admission overwrites the
-    whole slot).  ``caches["length"]`` must be the per-slot ``(B,)`` form
-    (``init_caches(per_slot=True)``).  With ``with_stats=True`` the returned
-    stats dict is the batch-aggregate plane traffic of the step — the
-    scheduler attributes it to the requests active at that step.
+    step; ``active`` masks the bookkeeping — an inactive slot's cache
+    ``length`` does not advance and its SSM/conv recurrent state passes
+    through untouched, so whatever junk it decodes leaves no trace.  The
+    state passthrough matters beyond free/retired slots: in the chunked
+    mixed tick a slot that is still PREFILLING rides the decode scan
+    inactive, and its mid-prompt recurrent state must survive (its junk KV
+    single-token writes land at the frozen ``length`` offset, masked by
+    ``kv_valid_len`` and overwritten by the next chunk — but a recurrence
+    carries, so it is masked explicitly).  ``caches["length"]`` must be the
+    per-slot ``(B,)`` form (``init_caches(per_slot=True)``).  With
+    ``with_stats=True`` the returned stats dict is the batch-aggregate plane
+    traffic of the step — the scheduler attributes it to the requests active
+    at that step.
     """
     ctx = as_quant_ctx(quant, default_backend="pallas")
 
@@ -178,6 +215,8 @@ def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
         new_caches = dict(new_caches)
         new_caches["length"] = jnp.where(active, new_caches["length"],
                                          caches["length"])
+        new_caches["layers"] = _mask_recurrent_rows(
+            new_caches["layers"], caches["layers"], active)
         if with_stats:
             return logits[:, -1], new_caches, stats
         return logits[:, -1], new_caches
@@ -208,6 +247,66 @@ def make_slot_prefill(cfg: ModelConfig, quant: QuantFlag = False, *,
         caches["length"] = true_len
         return last, caches
     return _maybe_shard(prefill, mesh, in_shardings, out_shardings)
+
+
+def make_slot_prefill_chunk(cfg: ModelConfig, quant: QuantFlag = False,
+                            with_stats: bool = False, *,
+                            mesh=None, in_shardings=None, out_shardings=None):
+    """``(params, pool, pool_logits, tokens (B, chunk_len), chunk_valid (B,),
+    fresh (B,), finishing (B,)) -> (logits (B, V), pool[, stats])``: ONE
+    prompt chunk per prefilling slot, written straight into the slot pool.
+
+    The chunked-prefill ingestion step (``serving/scheduler.py``): each
+    prefilling row feeds its next ``chunk_valid[b]`` real prompt tokens
+    (right-padded to the fixed ``chunk_len`` slab — ONE compiled shape for
+    every prompt length, vs one program per bucket), appended at the row's
+    current cache ``length`` via the per-row cache-write path
+    (``forward(chunk_valid=...)``).  Rows that are decoding or free ride
+    along with ``chunk_valid == 0`` and come out bit-identical.
+
+    * ``fresh`` marks rows ingesting their FIRST chunk: their SSM/conv state
+      is zeroed and their ``length`` reset before the forward — admission
+      into a previously-used slot must not inherit the retired occupant's
+      recurrent state (stale KV rows need no reset; they sit beyond
+      ``length`` and are masked then overwritten).
+    * ``finishing`` marks rows whose chunk contains the prompt's last token:
+      their last-real-token logits are gathered into ``pool_logits`` (the
+      decode carry — the next tick samples their first generated token from
+      exactly what a bucketed prefill would have produced); other rows keep
+      their logits untouched.
+
+    ``quant=True`` resolves to the portable "xla" bit-plane backend like
+    bucketed prefill (chunk GEMMs are MXU-shaped; the skip kernel targets
+    decode).  ``with_stats=True`` appends the chunk forward's plane-traffic
+    stats dict — the scheduler attributes it to the rows prefilling at that
+    tick.  ``mesh=`` jits with the given shardings (:func:`jit_sharded`).
+    """
+    ctx = as_quant_ctx(quant, default_backend="xla")
+
+    def chunk_step(params, pool, pool_logits, tokens, chunk_valid, fresh,
+                   finishing):
+        length = jnp.where(fresh, 0, pool["length"])
+        zeros = tuple({k: jnp.zeros_like(v) for k, v in c.items()}
+                      if "ssm" in c else c for c in pool["layers"])
+        caches = {"layers": _mask_recurrent_rows(pool["layers"], zeros,
+                                                 jnp.logical_not(fresh)),
+                  "length": length}
+        out = forward(cfg, params, tokens=tokens, caches=caches, quant=ctx,
+                      chunk_valid=chunk_valid, return_stats=with_stats)
+        if with_stats:
+            logits, new_caches, stats = out
+        else:
+            logits, new_caches = out
+        b, _, v = logits.shape
+        idx = jnp.broadcast_to(
+            jnp.maximum(chunk_valid - 1, 0)[:, None, None], (b, 1, v))
+        last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+        new_logits = jnp.where(finishing[:, None],
+                               last.astype(pool_logits.dtype), pool_logits)
+        if with_stats:
+            return new_logits, new_caches, stats
+        return new_logits, new_caches
+    return _maybe_shard(chunk_step, mesh, in_shardings, out_shardings)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,20 @@ where QeiHaN's plane-skipping pays (PAPER §VI; DESIGN.md §Scheduler):
   configured bucket, so prefill compiles once per bucket, not once per
   prompt length.  Pad tokens are masked out of the SSM state
   (``valid_len``) and sit causally after every real token for attention.
+* **Chunked prefill** (``chunked="auto"|"always"``) — a prompt is split
+  into fixed ``chunk_len`` chunks fed straight into the slot pool across
+  successive ticks (``engine.make_slot_prefill_chunk``), interleaved with
+  decode for the other slots in ONE jitted mixed tick — a long prompt no
+  longer stalls every in-flight decode slot for its full prefill, and
+  admission is bounded by ``max_len`` instead of ``buckets[-1]``.  The
+  chunk slab is ONE compiled shape for every prompt length (vs one prefill
+  program per bucket).  ``"auto"`` (the default when enabling) chunks only
+  prompts longer than the largest bucket, so every in-bucket prompt keeps
+  the bucketed path's bit-exact token guarantee; ``"always"`` chunks
+  everything — maximal interleaving, tokens agree with the bucketed path
+  to f32-ULP logits (token-equal on every tested seed/arch, asserted in
+  tests, but not *guaranteed* bit-equal: chunk-boundary GEMM shapes
+  reassociate the same sums — DESIGN.md §Chunked prefill).
 * **Tick loop** — ONE jitted program steps *all* slots ``tick_steps``
   greedy tokens at a time (a ``lax.scan`` over ``make_slot_serve_step``);
   host logic between ticks detects EOS / length exhaustion, retires the
@@ -45,6 +59,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -67,12 +82,21 @@ def bucket_for(length: int, buckets: Sequence[int]) -> int:
                      f"bucket {max(buckets)}")
 
 
+def round_pool_len(base: int, chunk_len: int) -> int:
+    """Smallest multiple of ``chunk_len`` >= ``base`` — the ``max_len`` a
+    chunked :class:`ServeScheduler` accepts (the constructor validates
+    rather than silently rounding, so sizing stays an explicit caller
+    decision; every CLI/bench derives its pool through this helper)."""
+    return -(-int(base) // int(chunk_len)) * int(chunk_len)
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     rid: int
     prompt: np.ndarray                  # (L,) int32 token ids
     max_new: int
     eos_id: Optional[int] = None
+    submit_time: float = float("nan")   # time.perf_counter() at submit()
 
 
 @dataclasses.dataclass
@@ -88,6 +112,12 @@ class RequestResult:
     plane_traffic_fraction: float = float("nan")
     element_traffic_fraction: float = float("nan")
     error: Optional[str] = None         # why a "rejected" request never ran
+    # wall-clock marks on one time.perf_counter() clock — latency reporting
+    # (benchmarks/serve_bench.py): TTFT = first_token_time - submit_time
+    # (queue wait + prefill), e2e = finish_time - submit_time
+    submit_time: float = float("nan")
+    first_token_time: float = float("nan")
+    finish_time: float = float("nan")
 
 
 @dataclasses.dataclass
@@ -100,6 +130,12 @@ class _Slot:
     frac_sums: List[float] = dataclasses.field(
         default_factory=lambda: [0.0, 0.0])
     frac_steps: int = 0
+    # chunked-prefill state machine: an admitted slot is "prefill" until its
+    # last chunk lands (bucketed admissions enter directly at "decode"),
+    # then decodes until EOS/length retires it
+    phase: str = "decode"               # "prefill" | "decode"
+    prefill_pos: int = 0                # prompt tokens ingested so far
+    first_token_time: float = float("nan")
 
 
 class ServeScheduler:
@@ -116,6 +152,13 @@ class ServeScheduler:
         for p in prompts:
             sched.submit(p, max_new=32, eos_id=2)
         results = sched.run()          # List[RequestResult], rid order
+
+    ``chunked="auto"`` (or ``True``) adds chunked prefill: prompts longer
+    than the largest bucket — rejected outright without it — are ingested
+    ``chunk_len`` tokens per tick (default: the smallest bucket),
+    interleaved with decode for the other slots; ``chunked="always"``
+    chunks every prompt (maximal interleaving / bounded per-tick latency).
+    ``max_len`` must be a multiple of ``chunk_len``.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
@@ -127,7 +170,9 @@ class ServeScheduler:
                  tick_steps: int = 8,
                  generate_cache_size: Optional[int] = None,
                  mesh=None,
-                 oversize: str = "reject"):
+                 oversize: str = "reject",
+                 chunked="off",
+                 chunk_len: Optional[int] = None):
         if cfg.frontend != "none":
             raise ValueError("ServeScheduler serves token-id models only "
                              f"(frontend={cfg.frontend!r})")
@@ -140,6 +185,22 @@ class ServeScheduler:
         if not buckets or buckets[-1] > max_len:
             raise ValueError(f"buckets {buckets} must be non-empty and fit "
                              f"max_len={max_len}")
+        if isinstance(chunked, bool):
+            chunked = "auto" if chunked else "off"
+        if chunked not in ("off", "auto", "always"):
+            raise ValueError(f"chunked={chunked!r}: expected 'off', 'auto', "
+                             f"or 'always'")
+        chunk_len = int(buckets[0] if chunk_len is None else chunk_len)
+        if chunked != "off":
+            if not 1 <= chunk_len <= max_len:
+                raise ValueError(f"chunk_len={chunk_len} must be in "
+                                 f"[1, max_len={max_len}]")
+            if max_len % chunk_len:
+                # guarantees the ceil-aligned last slab of any admissible
+                # prompt ends <= max_len, so per-row slab writes never hit
+                # dynamic_update_slice clamping (which would misalign rows)
+                raise ValueError(f"max_len={max_len} must be a multiple of "
+                                 f"chunk_len={chunk_len}")
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -150,6 +211,8 @@ class ServeScheduler:
         self.tick_steps = tick_steps
         self.mesh = mesh
         self.oversize = oversize
+        self.chunked = chunked
+        self.chunk_len = chunk_len
 
         # the generate-program LRU serves the per-request parity / baseline
         # path (greedy_generate): size it so one program per (bucket x
@@ -198,6 +261,17 @@ class ServeScheduler:
                 tick_in=(spec["params"], spec["caches"], spec["logits"],
                          spec["active"]),
                 tick_out=(spec["logits"], spec["caches"], rep, rep),
+                # chunked prefill: the (B, chunk_len) token slab rides the
+                # per-slot row sharding (batch on `data`, like the pool);
+                # the (B,) valid/fresh/finishing flag vectors ride `active`'s
+                chunk_in=(spec["params"], spec["caches"], spec["logits"],
+                          spec["tokens"], spec["active"], spec["active"],
+                          spec["active"]),
+                chunk_out=(spec["logits"], spec["caches"], rep),
+                mixed_in=(spec["params"], spec["caches"], spec["logits"],
+                          spec["active"], spec["tokens"], spec["active"],
+                          spec["active"], spec["active"]),
+                mixed_out=(spec["logits"], spec["caches"], rep, rep, rep),
             )
         else:
             sh = collections.defaultdict(lambda: None)
@@ -233,10 +307,12 @@ class ServeScheduler:
             write_slot, mesh, in_shardings=sh["write_in"],
             out_shardings=sh["write_out"], donate_argnums=(0, 2))
 
-        # tick: scan tick_steps slot-masked greedy steps -> one program
+        # tick: scan tick_steps slot-masked greedy steps -> one program.
+        # tick_body is shared verbatim by the standalone tick and the mixed
+        # chunk+decode program, so the decode math is one code path.
         step = engine.make_slot_serve_step(cfg, quant, with_stats=with_stats)
 
-        def tick(params, pool, logits, active):
+        def tick_body(params, pool, logits, active):
             def body(carry, _):
                 lg, cs = carry
                 tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
@@ -255,8 +331,44 @@ class ServeScheduler:
             return lg, cs, jnp.swapaxes(toks, 0, 1), fracs
 
         self._tick = engine.jit_sharded(
-            tick, mesh, in_shardings=sh["tick_in"],
+            tick_body, mesh, in_shardings=sh["tick_in"],
             out_shardings=sh["tick_out"], donate_argnums=(1,))
+
+        # chunked prefill: ONE fixed (B, chunk_len) slab shape regardless of
+        # prompt length — the chunk-only program covers prefill-only ticks,
+        # the mixed program runs chunk ingestion AND the decode scan in one
+        # jitted dispatch so decode never drains while a long prompt ingests
+        self._chunk = self._mixed = None
+        if self.chunked != "off":
+            chunk_step = engine.make_slot_prefill_chunk(
+                cfg, quant, with_stats=with_stats)
+
+            def chunk_body(params, pool, logits, tokens, valid, fresh,
+                           finishing):
+                out = chunk_step(params, pool, logits, tokens, valid, fresh,
+                                 finishing)
+                if with_stats:
+                    lg, cs, stats = out
+                    cfrac = jnp.stack([stats["plane_traffic_fraction"],
+                                       stats["element_traffic_fraction"]])
+                else:
+                    lg, cs = out
+                    cfrac = jnp.zeros((2,), jnp.float32)
+                return lg, cs, cfrac
+
+            def mixed_tick(params, pool, logits, active, tokens, valid,
+                           fresh, finishing):
+                lg, cs, cfrac = chunk_body(params, pool, logits, tokens,
+                                           valid, fresh, finishing)
+                lg, cs, toks, fracs = tick_body(params, cs, lg, active)
+                return lg, cs, toks, fracs, cfrac
+
+            self._chunk = engine.jit_sharded(
+                chunk_body, mesh, in_shardings=sh["chunk_in"],
+                out_shardings=sh["chunk_out"], donate_argnums=(1,))
+            self._mixed = engine.jit_sharded(
+                mixed_tick, mesh, in_shardings=sh["mixed_in"],
+                out_shardings=sh["mixed_out"], donate_argnums=(1,))
 
     # ------------------------------------------------------------------ API
 
@@ -264,8 +376,10 @@ class ServeScheduler:
         """Queue one request; returns its rid (results come back in rid
         order from :meth:`run`).
 
-        A prompt that exceeds the largest prefill bucket (or whose prompt +
-        ``max_new`` overflows the slot capacity) is handled per the
+        A prompt that exceeds the admission bound (without chunking: the
+        largest prefill bucket; with ``chunked="auto"|"always"``: only the
+        slot capacity — chunking removes the bucket ceiling) or whose
+        prompt + ``max_new`` overflows the slot capacity is handled per the
         ``oversize`` policy: ``"reject"`` (default) records a per-request
         ``RequestResult(finish_reason="rejected", error=...)`` and leaves
         every queued/in-flight request untouched — submission during a live
@@ -274,18 +388,24 @@ class ServeScheduler:
         ``ValueError`` (batch scripts that want loud failures).  Empty
         prompts and ``max_new < 1`` are caller bugs and always raise.
         """
+        now = time.perf_counter()
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        fit = min(self.buckets[-1], self.max_len - max_new)
+        if self.chunked == "off":
+            fit = min(self.buckets[-1], self.max_len - max_new)
+        else:
+            fit = self.max_len - max_new
         if prompt.size > fit:
-            why = (f"prompt length {prompt.size} exceeds the largest "
-                   f"prefill bucket {self.buckets[-1]}"
-                   if prompt.size > self.buckets[-1] else
-                   f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
-                   f"the slot capacity max_len={self.max_len}")
+            if self.chunked == "off" and prompt.size > self.buckets[-1]:
+                why = (f"prompt length {prompt.size} exceeds the largest "
+                       f"prefill bucket {self.buckets[-1]} (enable chunked "
+                       f"prefill to lift the bucket ceiling)")
+            else:
+                why = (f"prompt ({prompt.size}) + max_new ({max_new}) "
+                       f"exceeds the slot capacity max_len={self.max_len}")
             if self.oversize == "raise":
                 raise ValueError(why)
             if self.oversize == "truncate" and fit >= 1:
@@ -296,12 +416,13 @@ class ServeScheduler:
                 self._results[rid] = RequestResult(
                     rid=rid, prompt_len=int(prompt.size), tokens=[],
                     finish_reason="rejected", admitted_tick=-1,
-                    finished_tick=self._tick_count, error=why)
+                    finished_tick=self._tick_count, error=why,
+                    submit_time=now, finish_time=now)
                 return rid
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(rid=rid, prompt=prompt, max_new=max_new,
-                                   eos_id=eos_id))
+                                   eos_id=eos_id, submit_time=now))
         return rid
 
     @property
@@ -318,40 +439,110 @@ class ServeScheduler:
             fn = getattr(fn, "jitted", fn)       # unwrap jit_sharded
             probe = getattr(fn, "_cache_size", None)
             return int(probe()) if callable(probe) else -1
-        return {"prefill": size(self._prefill),
-                "tick": size(self._tick),
-                "write_slot": size(self._write)}
+        stats = {"prefill": size(self._prefill),
+                 "tick": size(self._tick),
+                 "write_slot": size(self._write)}
+        if self.chunked != "off":
+            # ONE chunk-slab shape each, regardless of prompt lengths
+            stats["chunk"] = size(self._chunk)
+            stats["mixed"] = size(self._mixed)
+        return stats
 
     def step_tick(self) -> bool:
-        """Admit into every free slot, run one fused multi-step tick, retire
-        finished requests.  Returns False when there is nothing to do."""
+        """Admit into every free slot, feed one prompt chunk to every
+        prefilling slot, run one fused multi-step decode tick for every
+        decoding slot — chunk + decode in ONE jitted program when both kinds
+        are live — then retire finished requests.  Returns False when there
+        is nothing to do."""
         for i in range(self.max_slots):
             if not self._active[i] and self._queue:
                 self._admit(i, self._queue.popleft())
         if not self._active.any():
             return False
 
-        lg, pool, toks, fracs = self._tick(
-            self.params, self._pool, self._logits,
-            jnp.asarray(self._active))
-        self._logits, self._pool = lg, pool
-        toks_h = np.asarray(toks)                    # (max_slots, tick_steps)
-        fracs_h = np.asarray(fracs)                  # (tick_steps, 2)
+        # ---- build this tick's chunk slab (chunked admissions only) -------
+        chunk_rows = [i for i, s in enumerate(self._slots)
+                      if s is not None and s.phase == "prefill"]
+        valid = np.zeros((self.max_slots,), np.int32)
+        if chunk_rows:
+            tokens = np.zeros((self.max_slots, self.chunk_len), np.int32)
+            fresh = np.zeros((self.max_slots,), bool)
+            finishing = np.zeros((self.max_slots,), bool)
+            for i in chunk_rows:
+                s = self._slots[i]
+                take = min(self.chunk_len,
+                           s.req.prompt.size - s.prefill_pos)
+                tokens[i, :take] = s.req.prompt[s.prefill_pos:
+                                                s.prefill_pos + take]
+                valid[i] = take
+                fresh[i] = s.prefill_pos == 0
+                finishing[i] = s.prefill_pos + take >= s.req.prompt.size
+        # a slot whose LAST chunk lands this tick decodes in the same tick:
+        # the chunk phase writes its first-token logits before the scan runs
+        decode_mask = np.array(
+            [s is not None and not s.done
+             and (s.phase == "decode" or (chunk_rows and finishing[i]))
+             for i, s in enumerate(self._slots)])
 
-        for t in range(self.tick_steps):
-            for i, slot in enumerate(self._slots):
-                if slot is None or slot.done:
-                    continue
-                tok = int(toks_h[i, t])
-                slot.tokens.append(tok)
-                if self.with_stats:
-                    slot.frac_sums[0] += float(fracs_h[t, 0])
-                    slot.frac_sums[1] += float(fracs_h[t, 1])
-                    slot.frac_steps += 1
-                if slot.req.eos_id is not None and tok == slot.req.eos_id:
-                    slot.done, slot.finish_reason = True, "eos"
-                elif len(slot.tokens) >= slot.req.max_new:
-                    slot.done, slot.finish_reason = True, "length"
+        toks_h = fracs_h = cfrac_h = None
+        if chunk_rows and decode_mask.any():
+            lg, pool, toks, fracs, cfrac = self._mixed(
+                self.params, self._pool, self._logits,
+                jnp.asarray(decode_mask), jnp.asarray(tokens),
+                jnp.asarray(valid), jnp.asarray(fresh),
+                jnp.asarray(finishing))
+            self._logits, self._pool = lg, pool
+            toks_h, fracs_h = np.asarray(toks), np.asarray(fracs)
+            cfrac_h = np.asarray(cfrac)
+        elif chunk_rows:
+            lg, pool, cfrac = self._chunk(
+                self.params, self._pool, self._logits, jnp.asarray(tokens),
+                jnp.asarray(valid), jnp.asarray(fresh),
+                jnp.asarray(finishing))
+            self._logits, self._pool = lg, pool
+            cfrac_h = np.asarray(cfrac)
+        else:
+            lg, pool, toks, fracs = self._tick(
+                self.params, self._pool, self._logits,
+                jnp.asarray(decode_mask))
+            self._logits, self._pool = lg, pool
+            toks_h, fracs_h = np.asarray(toks), np.asarray(fracs)
+
+        now = time.perf_counter()
+
+        # ---- chunk-phase bookkeeping --------------------------------------
+        for i in chunk_rows:
+            s = self._slots[i]
+            s.prefill_pos += int(valid[i])
+            if finishing[i]:
+                s.phase = "decode"
+            if self.with_stats and cfrac_h is not None:
+                # the chunk forward's batch-aggregate traffic, attributed to
+                # the requests that prefilled this tick (decode steps are
+                # attributed below, exactly as before)
+                s.frac_sums[0] += float(cfrac_h[0])
+                s.frac_sums[1] += float(cfrac_h[1])
+                s.frac_steps += 1
+
+        # ---- decode-phase bookkeeping -------------------------------------
+        if toks_h is not None:
+            for t in range(self.tick_steps):
+                for i, slot in enumerate(self._slots):
+                    if slot is None or slot.done or not decode_mask[i]:
+                        continue
+                    tok = int(toks_h[i, t])
+                    if not slot.tokens:
+                        slot.first_token_time = now
+                    slot.tokens.append(tok)
+                    if self.with_stats:
+                        slot.frac_sums[0] += float(fracs_h[t, 0])
+                        slot.frac_sums[1] += float(fracs_h[t, 1])
+                        slot.frac_steps += 1
+                    if slot.req.eos_id is not None \
+                            and tok == slot.req.eos_id:
+                        slot.done, slot.finish_reason = True, "eos"
+                    elif len(slot.tokens) >= slot.req.max_new:
+                        slot.done, slot.finish_reason = True, "length"
 
         self._tick_count += 1
         for i, slot in enumerate(self._slots):
@@ -371,8 +562,24 @@ class ServeScheduler:
 
     # ------------------------------------------------------------ internals
 
+    def _uses_chunks(self, prompt_len: int) -> bool:
+        """Chunk-vs-bucket admission policy: ``"always"`` chunks everything;
+        ``"auto"`` chunks only prompts no bucket can hold, so in-bucket
+        prompts keep the bucketed path's bit-exact token guarantee."""
+        if self.chunked == "always":
+            return True
+        return self.chunked == "auto" and prompt_len > self.buckets[-1]
+
     def _admit(self, slot_idx: int, req: Request) -> None:
         length = int(req.prompt.size)
+        if self._uses_chunks(length):
+            # chunked ingestion: no prefill here — step_tick feeds the
+            # prompt chunk-by-chunk into the pool, interleaved with decode
+            self._active[slot_idx] = True
+            self._slots[slot_idx] = _Slot(req=req,
+                                          admitted_tick=self._tick_count,
+                                          phase="prefill")
+            return
         bucket = bucket_for(length, self.buckets)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :length] = req.prompt
@@ -399,6 +606,9 @@ class ServeScheduler:
                                     if self.with_stats else float("nan")),
             element_traffic_fraction=(slot.frac_sums[1] / n
                                       if self.with_stats else float("nan")),
+            submit_time=slot.req.submit_time,
+            first_token_time=slot.first_token_time,
+            finish_time=time.perf_counter(),
         )
         self._active[slot_idx] = False
         self._slots[slot_idx] = None

@@ -1,0 +1,255 @@
+"""Chunked prefill through the ServeScheduler (ISSUE 4).
+
+Covers the chunk-boundary lattice (prompt lengths 1, chunk_len±1, exact
+multiples, longer than the largest bucket), both admission policies
+(``"auto"`` — in-bucket prompts keep the bucketed bit-exact path, only
+over-bucket prompts chunk — and ``"always"``), the oversized-prompt
+policies under chunking, quantized serving with per-request traffic
+attribution, slot-reuse state reset, the one-compiled-chunk-shape bound,
+and the latency timestamps serve_bench consumes.
+
+Parity bar: token streams equal the per-request ``greedy_generate``
+output.  For bucketed admissions that is the PR 2 bit-equality guarantee;
+for chunked admissions the logits agree to f32 ULP (chunk-boundary GEMM
+shapes reassociate the same sums — DESIGN.md §Chunked prefill) and the
+greedy token streams are asserted equal on every tested
+length/arch/backend.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.models.quantize import quantize_model_params
+from repro.serving import engine
+from repro.serving.scheduler import ServeScheduler
+
+BUCKETS = (8, 16)          # chunk_len defaults to buckets[0] == 8
+# the boundary lattice: 1, chunk_len-1/exact/+1, bucket edge, multiples,
+# > largest bucket (rejected outright before this PR), near slot capacity
+CHUNK_LENS = (1, 7, 8, 9, 16, 24, 40, 56)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("smollm_135m").replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in CHUNK_LENS]
+    return cfg, params, prompts
+
+
+def _reference(cfg, params, prompt, max_new, quant=False):
+    return list(np.asarray(engine.greedy_generate(
+        cfg, params, jnp.asarray(prompt)[None], max_new=max_new,
+        quant=quant))[0])
+
+
+def test_chunk_boundary_lengths_always_mode(setup):
+    """Every boundary length through chunked="always" (every prompt chunks,
+    including the one-token one) matches greedy_generate, with interleaving
+    forced by 3 slots over 8 requests; exactly ONE chunk and ONE mixed
+    program compile across all lengths, and no bucket program is ever
+    touched."""
+    cfg, params, prompts = setup
+    max_new = 7
+    sched = ServeScheduler(cfg, params, max_slots=3, max_len=64,
+                           buckets=BUCKETS, tick_steps=4, chunked="always")
+    for p in prompts:
+        sched.submit(p, max_new=max_new)
+    results = sched.run()
+    assert len(results) == len(prompts)
+    for r, p in zip(results, prompts):
+        assert r.finish_reason == "length"
+        assert r.tokens == _reference(cfg, params, p, max_new), r.prompt_len
+        # latency marks ride one clock: submit <= first token <= finish
+        assert r.submit_time <= r.first_token_time <= r.finish_time
+    stats = sched.compile_stats()
+    assert stats["chunk"] == 1 and stats["mixed"] <= 1, stats
+    assert stats["prefill"] == 0 and stats["write_slot"] == 0, stats
+
+
+def test_auto_mode_buckets_short_chunks_long(setup):
+    """chunked="auto": in-bucket prompts take the UNCHANGED bucketed path
+    (bit-exact by construction — same programs as a chunkless scheduler),
+    over-bucket prompts chunk instead of being rejected."""
+    cfg, params, prompts = setup
+    max_new = 7
+    sched = ServeScheduler(cfg, params, max_slots=2, max_len=64,
+                           buckets=BUCKETS, tick_steps=4, chunked="auto")
+    for p in prompts:
+        sched.submit(p, max_new=max_new)
+    results = sched.run()
+    for r, p in zip(results, prompts):
+        assert r.finish_reason == "length"
+        assert r.tokens == _reference(cfg, params, p, max_new), r.prompt_len
+    stats = sched.compile_stats()
+    # short prompts used the bucket programs, long ones the chunk programs
+    assert stats["prefill"] == len(BUCKETS) and stats["chunk"] == 1, stats
+
+    # the SAME long prompt is a rejection without chunking
+    off = ServeScheduler(cfg, params, max_slots=2, max_len=64,
+                         buckets=BUCKETS, tick_steps=4)
+    rid = off.submit(prompts[-1], max_new=max_new)
+    (r,) = off.run()
+    assert r.rid == rid and r.finish_reason == "rejected"
+    assert "bucket" in r.error
+
+
+def test_mamba_chunked_parity():
+    """SSM arch: cross-chunk state handoff (ssd init_state + rolling conv
+    window + dt-masked pads) and the inactive-row state passthrough in the
+    mixed tick — a prefilling slot's recurrent state must survive decode
+    scans it rides inactively."""
+    cfg = get_smoke("mamba2_780m").replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    lens = (3, 7, 8, 9, 17, 30, 44)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lens]
+    max_new = 5
+    for mode in ("auto", "always"):
+        sched = ServeScheduler(cfg, params, max_slots=3, max_len=64,
+                               buckets=BUCKETS, tick_steps=3, chunked=mode)
+        for p in prompts:
+            sched.submit(p, max_new=max_new)
+        for r, p in zip(sched.run(), prompts):
+            assert r.tokens == _reference(cfg, params, p, max_new), \
+                (mode, r.prompt_len)
+
+
+def test_quant_chunked_parity_and_traffic(setup):
+    """Quant bit-plane serving through chunked prefill: token parity vs the
+    quantized greedy_generate, and chunk-phase plane traffic is attributed
+    to the prefilling requests (fractions land in (0, 1])."""
+    cfg, params, _ = setup
+    qparams = quantize_model_params(cfg, params)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 20, 40)]
+    sched = ServeScheduler(cfg, qparams, max_slots=2, max_len=48,
+                           buckets=BUCKETS, quant="xla", with_stats=True,
+                           tick_steps=2, chunked="always")
+    for p in prompts:
+        sched.submit(p, max_new=4)
+    for r, p in zip(sched.run(), prompts):
+        assert r.tokens == _reference(cfg, qparams, p, 4, "xla"), r.prompt_len
+        assert 0.0 < r.plane_traffic_fraction <= 1.0
+        assert 0.0 < r.element_traffic_fraction <= 1.0
+
+
+def test_long_prompt_interleaves_with_decode(setup):
+    """The headline behavior: while a long prompt ingests chunk-by-chunk,
+    short requests on other slots keep decoding — and a short request
+    submitted later still FINISHES before the long prompt's first token
+    (decode never drains during a long prefill)."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(3)
+    long_p = rng.integers(0, cfg.vocab_size, size=56).astype(np.int32)
+    short_ps = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+                for _ in range(3)]
+    sched = ServeScheduler(cfg, params, max_slots=2, max_len=64,
+                           buckets=BUCKETS, tick_steps=2, chunked="auto")
+    long_rid = sched.submit(long_p, max_new=4)
+    rids = [sched.submit(p, max_new=4) for p in short_ps]
+    results = {r.rid: r for r in sched.run()}
+    for rid, p in zip(rids, short_ps):
+        assert results[rid].tokens == _reference(cfg, params, p, 4)
+    long_r = results[long_rid]
+    assert long_r.tokens == _reference(cfg, params, long_p, 4)
+    # 56 tokens / chunk 8 = 7 ingest ticks; the first short request finished
+    # while that was still going (finished_tick strictly before the long
+    # request's first possible decode tick)
+    assert min(results[r].finished_tick for r in rids) <= 7
+    assert long_r.finished_tick >= 7
+
+
+def test_oversize_policies_with_chunking(setup):
+    """Regression: reject/truncate/raise still police the slot-capacity
+    bound when chunking removes the bucket ceiling."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(4)
+    big = rng.integers(0, cfg.vocab_size, size=60).astype(np.int32)
+
+    # reject: prompt + max_new > max_len even though chunking would ingest it
+    sched = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                           buckets=BUCKETS, tick_steps=2, chunked="auto")
+    rid = sched.submit(big, max_new=4)
+    ok = sched.submit(big[:20], max_new=4)      # over-bucket but fits: serves
+    results = {r.rid: r for r in sched.run()}
+    assert results[rid].finish_reason == "rejected"
+    assert "slot capacity" in results[rid].error
+    assert "bucket" not in results[rid].error   # chunking lifted that bound
+    assert results[ok].tokens == _reference(cfg, params, big[:20], 4)
+
+    # truncate: keeps the latest context that fits, then chunks it
+    tr = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                        buckets=BUCKETS, tick_steps=2, chunked="auto",
+                        oversize="truncate")
+    rid = tr.submit(big, max_new=4)
+    (r,) = tr.run()
+    assert r.rid == rid and r.finish_reason == "length"
+    assert r.tokens == _reference(cfg, params, big[-28:], 4)
+
+    # raise: loud failure preserved
+    strict = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                            buckets=BUCKETS, tick_steps=2, chunked="auto",
+                            oversize="raise")
+    with pytest.raises(ValueError, match="slot capacity"):
+        strict.submit(big, max_new=4)
+
+
+def test_slot_reuse_resets_chunked_state(setup):
+    """More chunked requests than slots: each slot serves several requests
+    back-to-back, so parity of the later ones proves the fresh-row reset
+    (ssm/conv zeroed, length restarted) wipes the retired occupant."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (20, 33, 18, 25)]
+    sched = ServeScheduler(cfg, params, max_slots=1, max_len=64,
+                           buckets=BUCKETS, tick_steps=2, chunked="always")
+    for p in prompts:
+        sched.submit(p, max_new=4)
+    results = sched.run()
+    assert sum(r.admitted_tick > 0 for r in results) >= 3
+    for r, p in zip(results, prompts):
+        assert r.tokens == _reference(cfg, params, p, 4), r.prompt_len
+
+
+def test_chunked_validation(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="chunked="):
+        ServeScheduler(cfg, params, max_len=32, buckets=BUCKETS,
+                       chunked="sometimes")
+    with pytest.raises(ValueError, match="multiple of"):
+        ServeScheduler(cfg, params, max_len=36, buckets=BUCKETS,
+                       chunked="auto")          # 36 % 8 != 0
+    with pytest.raises(ValueError, match="chunk_len"):
+        ServeScheduler(cfg, params, max_len=32, buckets=BUCKETS,
+                       chunked="auto", chunk_len=0)
+    # chunked=True is accepted as "auto"; chunk_len irrelevant when off
+    s = ServeScheduler(cfg, params, max_len=32, buckets=BUCKETS,
+                       chunked=True)
+    assert s.chunked == "auto" and s.chunk_len == BUCKETS[0]
+    s = ServeScheduler(cfg, params, max_len=36, buckets=BUCKETS)
+    assert s.chunked == "off"
+
+
+def test_rejected_result_carries_timestamps(setup):
+    """serve_bench derives TTFT/e2e from the result timestamps; rejected
+    requests must carry submit/finish marks too (their e2e is the rejection
+    turnaround) while first_token_time stays nan."""
+    cfg, params, _ = setup
+    sched = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                           buckets=BUCKETS, tick_steps=2)
+    rid = sched.submit(np.arange(17, dtype=np.int32), max_new=2)
+    r = sched._results[rid]
+    assert r.finish_reason == "rejected"
+    assert np.isfinite(r.submit_time) and np.isfinite(r.finish_time)
+    assert r.finish_time >= r.submit_time
+    assert np.isnan(r.first_token_time)

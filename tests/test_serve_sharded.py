@@ -79,6 +79,59 @@ class TestShardedScheduler:
         assert out.count("BIT-EQUAL") == 4 and "ok" in out
 
 
+_CHUNKED_BODY = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.models.quantize import quantize_model_params
+from repro.serving.scheduler import ServeScheduler
+from repro.launch.mesh import make_serve_mesh
+
+cfg = get_smoke("{arch}").replace(dtype=jnp.float32)
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+# chunk boundaries + prompts past the largest bucket: the mixed
+# chunk+decode program must partition exactly (chunk slab on `data`, flag
+# vectors like `active`)
+prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+           for n in (5, 12, 30, 9, 40)]
+
+def run(ps, quant, mesh):
+    sched = ServeScheduler(cfg, ps, max_slots=2, max_len=64,
+                           buckets=(8, 16), tick_steps=4, quant=quant,
+                           mesh=mesh, chunked="auto")
+    for p in prompts:
+        sched.submit(p, max_new=8)
+    res = sched.run()
+    assert all(r.finish_reason == "length" for r in res), res
+    return [r.tokens for r in res]
+
+for quant, ps in ((False, params), ("xla", quantize_model_params(cfg, params))):
+    base = run(ps, quant, None)
+    assert all(len(t) == 8 for t in base)
+    for spec in ("2x2", "4x1"):
+        got = run(ps, quant, make_serve_mesh(spec))
+        assert got == base, (quant, spec, base, got)
+        print("{arch}", "chunked", quant, spec, "BIT-EQUAL")
+print("ok")
+"""
+
+
+class TestShardedChunkedScheduler:
+    """ISSUE 4: chunked prefill under a mesh — the (B, chunk_len) slab and
+    the mixed chunk+decode program run tensor/data-parallel with token
+    streams bit-equal to the single-device chunked scheduler, long
+    (over-bucket) prompts included."""
+
+    def test_attention_chunked_bit_equal(self):
+        out = run_py(_CHUNKED_BODY.format(arch="smollm_135m"))
+        assert out.count("BIT-EQUAL") == 4 and "ok" in out
+
+    def test_mamba_chunked_bit_equal(self):
+        out = run_py(_CHUNKED_BODY.format(arch="mamba2_780m"))
+        assert out.count("BIT-EQUAL") == 4 and "ok" in out
+
+
 class TestShardedEngine:
     def test_greedy_generate_bit_equal_and_lru_key(self):
         out = run_py("""
