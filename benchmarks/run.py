@@ -34,6 +34,7 @@ def main() -> None:
     from benchmarks.serve_bench import ALL_SERVE_BENCHES
 
     if args.dry:
+        import json
         names = (list(ALL_FIGURES) + [f"kernels.{k}" for k in
                                       ALL_KERNEL_BENCHES]
                  + list(ALL_DECODE_BENCHES)
@@ -41,9 +42,17 @@ def main() -> None:
         print(f"# dry run: {len(names)} bench groups registered "
               f"({','.join(names)})")
         print("name,value,paper_reference")
-        for name, val, _ in decode_bench(batch=1, prompt_len=8, new_tokens=4,
-                                         repeats=1):
+        rows = list(decode_bench(batch=1, prompt_len=8, new_tokens=4,
+                                 repeats=1))
+        for name, val, _ in rows:
             print(f"{name},{val:.4f},")
+        # machine-readable summary for the bench-drift gate
+        # (tools/bench_check.py vs benchmarks/baselines/run_dry.json);
+        # `registered` catches a bench group silently dropping out
+        print("# json " + json.dumps(
+            {"bench": "run_dry",
+             "rows": dict({"registered_groups": float(len(names))},
+                          **{n: float(v) for n, v, _ in rows})}))
         return
 
     only = set(args.only.split(",")) if args.only else None

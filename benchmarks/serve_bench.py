@@ -319,6 +319,97 @@ def serve_bench_chunked(arch: str = "smollm_135m", n_requests: int = 24,
     return rows
 
 
+def serve_bench_prefix(arch: str = "smollm_135m", n_requests: int = 24,
+                       max_slots: int = 4, tick_steps: int = 8,
+                       max_new: int = 16, seed: int = 0,
+                       prefix_len: int = 48, page_len: int = 16,
+                       buckets: Tuple[int, ...] = (16, 64)):
+    """ISSUE 5 ``--prefix-trace``: a shared-system-prompt workload — every
+    request is one long common prefix plus a short unique tail — replayed
+    through the dense ServeScheduler and the paged+prefix-cache scheduler.
+
+    Reports the prefix hit rate, the fraction of prefill cache-write
+    traffic the radix cache eliminated (each cached token skips its
+    per-layer K/V writes AND its prefill compute — the serving-level image
+    of the paper's §VI avoided memory accesses), and TTFT p50/p95 head to
+    head.  The first ``max_slots`` admissions necessarily miss (the donor
+    retires before its pages become shareable); every later admission hits.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.serving.scheduler import ServeScheduler, round_pool_len
+
+    cfg = get_smoke(arch).replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len).astype(np.int32)
+    trace = []
+    for _ in range(n_requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 13))).astype(np.int32)
+        trace.append((0.0, np.concatenate([prefix, tail])))
+    pool_len = round_pool_len(prefix_len + 16 + max_new + tick_steps,
+                              page_len)
+    nan = float("nan")
+    rows = []
+    ttft95 = {}
+    for label, kw in (("dense", {}),
+                      ("paged", dict(paged=True, page_len=page_len,
+                                     prefix_cache=True, chunked="auto",
+                                     chunk_len=page_len))):
+        sched = ServeScheduler(cfg, params, max_slots=max_slots,
+                               max_len=pool_len, buckets=buckets,
+                               tick_steps=tick_steps, **kw)
+        _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size),
+                       max_new)
+        if label == "paged":
+            # warm the HIT-path programs too (suffix chunk ingestion, the
+            # mixed chunk+decode tick, prefix-hit admission, partial-block
+            # COW): a throwaway shared-prefix family — its prefix differs
+            # from the timed trace's, so the timed hit accounting is clean.
+            # Sequential waves: the donor must RETIRE before a lookup can
+            # hit its pages.
+            wp = rng.integers(0, cfg.vocab_size,
+                              size=2 * page_len + 3).astype(np.int32)
+            tails = [rng.integers(0, cfg.vocab_size,
+                                  size=4).astype(np.int32) for _ in range(3)]
+            _run_scheduler(sched,
+                           [(0.0, np.concatenate([wp, tails[0]]))], max_new)
+            _run_scheduler(sched,
+                           [(0.0, np.concatenate([wp, tails[1]]))], max_new)
+            _run_scheduler(sched,
+                           [(0.0, np.concatenate([wp, tails[2]])),
+                            (0.0, rng.integers(0, cfg.vocab_size,
+                                               size=8).astype(np.int32))],
+                           max_new)
+            sched.reset_prefix_stats()
+        results, t, ticks = _run_scheduler(sched, trace, max_new)
+        results = results[-n_requests:]
+        total = sum(len(r.tokens) for r in results)
+        assert total == n_requests * max_new, (total, n_requests * max_new)
+        rows.append((f"serve.{cfg.name}.prefix[{label}].tok_s",
+                     total / t, nan))
+        lat, recs = _latency_rows(f"serve.{cfg.name}.prefix[{label}]",
+                                  results, ticks)
+        rows += lat
+        ttft95[label] = next(v for n, v, _ in lat if "ttft_p95" in n)
+        if label == "paged":
+            st = sched.prefix_cache_stats()
+            rows.append((f"serve.{cfg.name}.prefix.hit_rate",
+                         st["hit_rate"], nan))
+            rows.append((f"serve.{cfg.name}.prefix.cache_write_saved_frac",
+                         st["cache_write_saved_frac"], nan))
+            rows.append((f"serve.{cfg.name}.prefix.lookup_hits",
+                         st["lookup_hits"], nan))
+    rows.append((f"serve.{cfg.name}.prefix.ttft_p95_speedup",
+                 ttft95["dense"] / ttft95["paged"], nan))
+    _emit_json("serve_paged", rows, recs)
+    return rows
+
+
 def _sharded_child(arch: str, n_requests: int, max_slots: int,
                    tick_steps: int, max_new: int, seed: int,
                    buckets: Tuple[int, ...], mesh_spec: str):
@@ -412,11 +503,15 @@ def serve_bench_sharded(arch: str = "smollm_135m", n_requests: int = 16,
     if not rows:
         raise RuntimeError(f"sharded serve bench child produced no rows:\n"
                            f"{out.stdout}")
+    # the bit_equal / chunked_bit_equal rows are correctness metrics the
+    # bench-drift gate (tools/bench_check.py) checks exactly
+    _emit_json("serve_sharded", rows)
     return rows
 
 
 ALL_SERVE_BENCHES = {"serve": serve_bench,
                      "serve_chunked": serve_bench_chunked,
+                     "serve_paged": serve_bench_prefix,
                      "serve_sharded": serve_bench_sharded}
 
 
@@ -439,6 +534,14 @@ def main(argv=None) -> None:
     ap.add_argument("--chunked", action="store_true",
                     help="run the chunked-prefill A/B (monolithic vs "
                          "chunked p95 tick latency + long-prompt trace)")
+    ap.add_argument("--prefix-trace", action="store_true",
+                    help="run the shared-system-prompt workload through the "
+                         "dense vs paged+prefix-cache schedulers (hit rate, "
+                         "cache-write traffic saved, TTFT p50/p95 A/B)")
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="shared prefix length for --prefix-trace")
+    ap.add_argument("--page-len", type=int, default=16,
+                    help="KV page size for --prefix-trace")
     ap.add_argument("--sharded", action="store_true",
                     help="run the mesh-sharded variant (subprocess with "
                          "forced host devices)")
@@ -466,6 +569,10 @@ def main(argv=None) -> None:
         rows += serve_bench_chunked(args.arch, n_requests=4, max_slots=2,
                                     tick_steps=2, max_new=4, seed=args.seed,
                                     buckets=(8, 16))
+        rows += serve_bench_prefix(args.arch, n_requests=6, max_slots=2,
+                                   tick_steps=2, max_new=4, seed=args.seed,
+                                   prefix_len=16, page_len=8,
+                                   buckets=(8, 32))
         rows += serve_bench_sharded(args.arch, n_requests=4, max_slots=2,
                                     tick_steps=2, max_new=4, seed=args.seed,
                                     buckets=(8, 16), mesh_spec=args.mesh,
@@ -475,14 +582,25 @@ def main(argv=None) -> None:
         names = [n for n, _, _ in rows]
         for want in ("ttft_p50_ms", "ttft_p95_ms", "e2e_p50_ms",
                      "e2e_p95_ms", "tick_p95_ms", "p95_tick_speedup",
-                     "long.served_frac", "chunked_bit_equal"):
+                     "long.served_frac", "chunked_bit_equal",
+                     "prefix.hit_rate", "prefix.cache_write_saved_frac"):
             assert any(want in n for n in names), (want, names)
+        # prefix-cache smoke: the shared-prefix trace must actually HIT
+        hits = [v for n, v, _ in rows if n.endswith("prefix.lookup_hits")]
+        assert hits and hits[0] > 0, rows
     elif args.chunked:
         rows = serve_bench_chunked(args.arch, n_requests=args.requests,
                                    max_slots=args.max_slots,
                                    tick_steps=args.tick_steps,
                                    max_new=args.new_tokens, seed=args.seed,
                                    buckets=buckets)
+    elif args.prefix_trace:
+        rows = serve_bench_prefix(args.arch, n_requests=args.requests,
+                                  max_slots=args.max_slots,
+                                  tick_steps=args.tick_steps,
+                                  max_new=args.new_tokens, seed=args.seed,
+                                  prefix_len=args.prefix_len,
+                                  page_len=args.page_len)
     elif args.sharded:
         rows = serve_bench_sharded(args.arch, n_requests=args.requests,
                                    max_slots=args.max_slots,

@@ -19,7 +19,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_smoke, list_archs
+from repro.configs import get_smoke
 from repro.core import log2_quantize, weight_access_report
 from repro.models import init_caches, init_params
 from repro.models.quantize import quantize_model_params

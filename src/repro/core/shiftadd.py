@@ -41,7 +41,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List, NamedTuple, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import bitplane as bp

@@ -46,7 +46,6 @@ def bitplane_matmul_pallas(exp: jnp.ndarray, sign: jnp.ndarray,
     m, k = exp.shape
     bits, _, n = planes.shape
 
-    bm = min(block_m, m) if m % block_m == 0 else block_m
     pm, pk, pn = (-m) % block_m, (-k) % block_k, (-n) % block_n
     sentinel = -(1 << (n_bits - 1))
     # pad activations with the sentinel (contributes nothing), weights with 0.

@@ -24,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ALIASES, get_config, get_smoke, list_archs
 from repro.launch.hlo_analysis import analyze_hlo
-from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch import policy
 from repro.launch.shapes import SHAPES, input_specs, shape_applicable
 from repro.launch.shardings import (batch_shardings, cache_shardings,

@@ -28,6 +28,7 @@ sets ``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax init):
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 import time
 
@@ -67,18 +68,34 @@ def _serve_continuous(cfg, params, args, mesh):
     chunk_len = args.chunk_len or 8
     long_max = (3 * args.prompt_len) if chunked != "off" else args.prompt_len
     pool = max(long_max, max(buckets)) + args.new_tokens + args.tick_steps
-    if chunked != "off":
-        pool = round_pool_len(pool, chunk_len)
+    # ONE rounding to the lcm: sequential round-ups could undo each other
+    # (e.g. chunk 12 then page 16 yields 112, not a multiple of 12)
+    quantum = 1
+    if chunked != "off" or args.prefix_cache:
+        quantum = chunk_len
+    if args.paged or args.prefix_cache:
+        quantum = math.lcm(quantum, args.page_len)
+    if quantum > 1:
+        pool = round_pool_len(pool, quantum)
     sched = ServeScheduler(
         cfg, params, max_slots=args.max_slots, max_len=pool,
         buckets=buckets, quant=quant, with_stats=args.quant,
         tick_steps=args.tick_steps, chunked=chunked, chunk_len=chunk_len,
+        paged=args.paged or args.prefix_cache, page_len=args.page_len,
+        prefix_cache=args.prefix_cache,
         mesh=mesh if mesh is not None and mesh.size > 1 else None)
     rng = np.random.default_rng(args.seed)
+    # with a prefix cache, draw a shared-system-prompt workload (half the
+    # prompt is a common prefix) so the radix tree has something to hit
+    prefix = (rng.integers(0, cfg.vocab_size, size=max(args.prompt_len // 2,
+                                                       args.page_len))
+              .astype(np.int32) if args.prefix_cache else None)
     for _ in range(args.requests):
         n = int(rng.integers(2, long_max + 1))
-        sched.submit(rng.integers(0, cfg.vocab_size, size=n),
-                     max_new=args.new_tokens, eos_id=args.eos_id)
+        p = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+        if prefix is not None and rng.random() < 0.75:
+            p = np.concatenate([prefix, p])[:max(long_max, len(prefix) + 2)]
+        sched.submit(p, max_new=args.new_tokens, eos_id=args.eos_id)
     t0 = time.perf_counter()
     results = sched.run()
     dt = time.perf_counter() - t0
@@ -87,6 +104,9 @@ def _serve_continuous(cfg, params, args, mesh):
                 "x".join(str(s) for s in sched.mesh.devices.shape) + " mesh")
     chunk_tag = ("" if chunked == "off"
                  else f", chunked={chunked}/{sched.chunk_len}")
+    if sched.paged:
+        chunk_tag += (f", paged/{sched.page_len}"
+                      + ("+prefix" if sched.prefix_cache else ""))
     print(f"[serve] {cfg.name}: continuous batching ({mesh_tag}{chunk_tag}) "
           f"— {len(results)} requests, {sched.max_slots} slots, "
           f"tick={sched.tick_steps}: "
@@ -113,6 +133,14 @@ def _serve_continuous(cfg, params, args, mesh):
         elem = float(np.mean([r.element_traffic_fraction for r in served]))
         print(f"[serve] per-request plane_traffic_fraction: {tile:.3f} "
               f"tile-granular, {elem:.3f} element-granular")
+    if sched.prefix_cache:
+        st = sched.prefix_cache_stats()
+        print(f"[serve] prefix cache: hit_rate {st['hit_rate']:.3f} "
+              f"({int(st['cached_tokens'])}/{int(st['prompt_tokens'])} "
+              f"prompt tokens from shared pages, "
+              f"{int(st['lookup_hits'])}/{int(st['lookups'])} lookups hit; "
+              f"pages {int(st['pages_in_use'])} in use / "
+              f"{int(st['pages_free'])} free)")
     r0 = results[0]
     print(f"sample request 0 ({r0.finish_reason}):", r0.tokens[:8])
 
@@ -159,6 +187,18 @@ def main(argv=None):
     ap.add_argument("--chunk-len", type=int, default=None,
                     help="tokens ingested per chunk per tick (default 8, "
                          "the smallest bucket)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool (continuous mode): slots share a "
+                         "pool of fixed-size pages through per-slot page "
+                         "tables instead of owning dense cache slabs")
+    ap.add_argument("--page-len", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the paged pool (implies "
+                         "--paged): requests re-use the cached KV of their "
+                         "longest shared prompt prefix and prefill only "
+                         "the suffix; the trace draws shared-prefix "
+                         "prompts to show hits")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)

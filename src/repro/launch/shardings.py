@@ -176,7 +176,8 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
                     long_context: bool = False,
                     axes: Optional[tuple] = None,
                     model_axis: Optional[str] = "model",
-                    ssm_model: bool = True) -> Any:
+                    ssm_model: bool = True,
+                    paged: bool = False) -> Any:
     """KV caches (R, B, S, Hkv, D) / SSM states (R, B, H, P, N).
 
     decode: batch on the data axes; long-context (batch=1): KV sequence dim
@@ -191,6 +192,12 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
     meshes; tests/test_serve_sharded.py), so the *executing* serve path
     (``serve_shardings``) opts out while lowering-only consumers (the
     dry-run) keep the full TP image.
+
+    ``paged=True`` reads the KV leaves as page pools (R, P, page_len, Hkv,
+    D): the page dim takes the batch role (pages on data — every slot's
+    rows live in its pages, scattered/gathered through the page table) and
+    the in-page token dim is NEVER sharded, so the (page, offset) indexing
+    of ``models.attention._paged_write`` touches no sharded-axis reshape.
     """
     from repro.launch.mesh import batch_axes
     bax = tuple(axes) if axes is not None else batch_axes(mesh)
@@ -206,6 +213,11 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
                 return NamedSharding(mesh, P(bax if len(bax) > 1 else bax[0]))
             return NamedSharding(mesh, P())
         entries = [None] * len(shape)
+        if paged and ("'k'" in name or "'v'" in name):
+            # page pool (R, P, page_len, Hkv, D): pages on data only
+            if shape[1] % nb == 0 and nb > 1:
+                entries[1] = bax if len(bax) > 1 else bax[0]
+            return NamedSharding(mesh, P(*entries))
         if "'k'" in name or "'v'" in name:          # (R, B, S, Hkv, D)
             if long_context:
                 if shape[2] % nb == 0 and nb > 1:
@@ -236,7 +248,8 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
 def serve_shardings(mesh: Mesh, params_tree: Any, caches_tree: Any, *,
                     batch: int,
                     model_axis: Optional[str] = "model",
-                    axes: Optional[tuple] = None) -> dict:
+                    axes: Optional[tuple] = None,
+                    paged: bool = False) -> dict:
     """Everything the mesh-native serving stack pins at jit boundaries.
 
     One bundle so ``serving/engine.py`` / ``serving/scheduler.py`` consume a
@@ -261,6 +274,10 @@ def serve_shardings(mesh: Mesh, params_tree: Any, caches_tree: Any, *,
       vector (the decode-active mask and the chunked ``chunk_valid`` /
       ``fresh`` / ``finishing`` vectors).
     * ``replicated`` — the catch-all for host-supplied scalars.
+
+    ``paged=True`` (the paged slot pool, ISSUE 5): KV leaves are page
+    pools sharded pages-on-data (see ``cache_shardings``); the host-built
+    page table rides the ``tokens`` sharding — its rows follow the slots.
     """
     from repro.launch.mesh import batch_axes
     bax = tuple(axes) if axes is not None else batch_axes(mesh)
@@ -272,7 +289,7 @@ def serve_shardings(mesh: Mesh, params_tree: Any, caches_tree: Any, *,
                                    model_axis=model_axis),
         "caches": cache_shardings(mesh, caches_tree, batch=batch,
                                   axes=bax, model_axis=model_axis,
-                                  ssm_model=False),
+                                  ssm_model=False, paged=paged),
         "logits": NamedSharding(mesh, P(*row, None)),
         "tokens": NamedSharding(mesh, P(*row, None)),
         "active": NamedSharding(mesh, row),

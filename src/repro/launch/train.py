@@ -16,12 +16,9 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
@@ -62,7 +59,6 @@ def main(argv=None):
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "pod2")
     bax = batch_axes(mesh)
-    n_data = int(np.prod([mesh.shape[a] for a in bax])) or 1
 
     dcfg = DataConfig(global_batch=args.global_batch, seq_len=args.seq_len,
                       vocab_size=cfg.vocab_size, seed=args.seed)

@@ -239,6 +239,56 @@ class KVCache(NamedTuple):
     length: jnp.ndarray       # () int32 — tokens currently valid
 
 
+class PagedKVCache(NamedTuple):
+    """Paged slot-pool KV (``serving/scheduler.py`` ``paged=True``).
+
+    The pool stores fixed-size pages shared by every slot; each slot's
+    logical ``(max_len, G, D)`` cache is the run of pages named by its
+    page-table row.  Entry 0 is the reserved trash page — junk writes
+    (inactive rows, pad positions) are redirected there instead of the
+    dense path's "write back own bytes" trick (``serving.kvpool``).
+    """
+    k: jnp.ndarray            # (P, page_len, G, D) page pool
+    v: jnp.ndarray
+    page_table: jnp.ndarray   # (B, n_blocks) int32 page ids, 0 = trash
+    length: jnp.ndarray       # (B,) int32 per-slot valid lengths
+
+
+def _paged_write(pool: jnp.ndarray, table: jnp.ndarray, new: jnp.ndarray,
+                 pos: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Scatter ``new`` (B, S, G, D) token rows into the page pool.
+
+    ``pos`` (B, S) are absolute token positions (page = ``table[b,
+    pos // page_len]``, offset = ``pos % page_len``); rows where ``keep``
+    is False — chunk padding, positions past the slot's allocated pages —
+    are redirected to the trash page.  Indexing stays in (page, offset)
+    form end to end: no reshape ever merges the page axis with the
+    in-page axis, so a page-sharded pool never sees a sharded-axis
+    reshape (the documented CPU-SPMD hazard, models/sharding.py).
+    """
+    page_len = pool.shape[1]
+    block = jnp.clip(pos // page_len, 0, table.shape[1] - 1)
+    page = jnp.take_along_axis(table, block, axis=1)
+    in_alloc = keep & (pos // page_len < table.shape[1])
+    page = jnp.where(in_alloc, page, 0)
+    off = jnp.where(in_alloc, pos % page_len, 0)
+    flat_page = page.reshape(-1)
+    flat_off = off.reshape(-1)
+    vals = new.reshape((-1,) + new.shape[2:]).astype(pool.dtype)
+    return pool.at[flat_page, flat_off].set(vals)
+
+
+def _paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Gather each slot's pages into its dense logical view: ``(P,
+    page_len, G, D)`` pool + ``(B, n_blocks)`` table -> ``(B, n_blocks *
+    page_len, G, D)`` — bytes at valid positions identical to the dense
+    slab's, junk (trash/unwritten) rows masked by the caller's
+    ``kv_valid_len`` exactly like dense-path padding."""
+    b, nb = table.shape
+    g = pool[table]                          # (B, nb, page_len, G, D)
+    return g.reshape((b, nb * pool.shape[1]) + pool.shape[2:])
+
+
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
                   dtype=jnp.bfloat16, length: int = 0) -> KVCache:
     return KVCache(
@@ -297,6 +347,37 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
         out = flash_attention(q, k, v, positions, positions, causal=True,
                               kv_chunk=cfg.kv_chunk)
         new_cache = None
+    elif isinstance(cache, PagedKVCache):
+        # paged slot pool: per-page scatter writes + page-gathered reads.
+        # Covers BOTH the decode step (S=1, every row appends at its own
+        # length) and the chunked-prefill slab (chunk_valid real rows per
+        # slot); the attention math is the same masked einsum as the dense
+        # paths over the gathered view, so valid positions are bit-equal.
+        pos = cache.length[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+        if chunk_valid is not None:
+            keep = (jnp.arange(s, dtype=jnp.int32)[None]
+                    < chunk_valid[:, None])
+            adv = chunk_valid
+        else:
+            keep = jnp.ones((b, s), bool)
+            adv = jnp.int32(s)
+        kc = _paged_write(cache.k, cache.page_table, k, pos, keep)
+        vc = _paged_write(cache.v, cache.page_table, v, pos, keep)
+        kc = shard(kc, "pool")
+        vc = shard(vc, "pool")
+        new_len = cache.length + adv
+        kg = _paged_gather(kc, cache.page_table)
+        vg = _paged_gather(vc, cache.page_table)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(kg.shape[1], dtype=jnp.int32), (b, kg.shape[1]))
+        if s == 1:
+            out = _decode_attention(q, kg, vg, positions, kv_pos,
+                                    kv_valid_len=new_len)
+        else:
+            out = _chunk_attention(q, kg, vg, positions, kv_pos,
+                                   kv_valid_len=new_len)
+        new_cache = PagedKVCache(k=kc, v=vc, page_table=cache.page_table,
+                                 length=new_len)
     elif chunk_valid is not None:
         # chunked prefill: write ONLY the real slab rows (pad positions
         # write the cache's own bytes back — an exact no-op, so a decode /

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.shiftadd import as_quant_ctx
 from repro.models import moe as moe_lib
 from repro.models import ssd as ssd_lib
-from repro.models.attention import KVCache, attention
+from repro.models.attention import KVCache, PagedKVCache, attention
 from repro.models.layers import (dense, dense_init, embed_init, rms_norm,
                                  swiglu)
 from repro.models.sharding import shard
@@ -241,19 +241,64 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     return {"layers": tuple(layers), "length": length}
 
 
+def init_paged_pool(cfg: ModelConfig, batch: int, max_len: int,
+                    n_pages: int, page_len: int, dtype=None) -> Params:
+    """Paged slot-pool caches (``serving/scheduler.py`` ``paged=True``).
+
+    Attention KV lives in a shared page pool ``(R, n_pages, page_len, G,
+    D)`` indexed through a host-side per-slot page table instead of a
+    dense ``(R, B, max_len, ...)`` slab — page 0 is the reserved trash
+    page (``serving.kvpool``).  SSM/conv recurrent state cannot be paged
+    (a recurrence has no per-position rows to alias) and keeps the dense
+    per-slot layout; ``length`` is per-slot like ``init_caches(per_slot=
+    True)``.  ``max_len`` must be a multiple of ``page_len`` so the
+    gathered per-slot view ``(B, blocks * page_len, ...)`` matches the
+    dense slab shape exactly (the bit-equality bar).
+    """
+    if max_len % page_len:
+        raise ValueError(f"max_len={max_len} must be a multiple of "
+                         f"page_len={page_len}")
+    if dtype is None:
+        dtype = cfg.cache_dtype or cfg.dtype
+    layers = []
+    for kind in cfg.pattern:
+        base = kind.split("_")[0]
+        if base == "attn":
+            c = {"k": jnp.zeros((cfg.repeats, n_pages, page_len,
+                                 cfg.n_kv_heads, cfg.head_dim), dtype),
+                 "v": jnp.zeros((cfg.repeats, n_pages, page_len,
+                                 cfg.n_kv_heads, cfg.head_dim), dtype)}
+        else:
+            st = ssd_lib.mamba2_init_state(batch, cfg, dtype)
+            c = {"ssm": jnp.broadcast_to(st.ssm, (cfg.repeats,) + st.ssm.shape),
+                 "conv": jnp.broadcast_to(st.conv,
+                                          (cfg.repeats,) + st.conv.shape)}
+        layers.append(c)
+    return {"layers": tuple(layers),
+            "length": jnp.zeros((batch,), jnp.int32)}
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
 def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
-                 cache, cache_len, quant, valid_len=None, chunk_valid=None):
+                 cache, cache_len, quant, valid_len=None, chunk_valid=None,
+                 page_table=None):
     base = kind.split("_")[0]
     is_moe = kind.endswith("_moe")
     x = shard(x, "btd")                     # keep the scan carry SP-sharded
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if base == "attn":
-        kv = None if cache is None else KVCache(
-            k=cache["k"], v=cache["v"], length=cache_len)
+        if cache is None:
+            kv = None
+        elif page_table is not None:
+            # paged slot pool: this layer's KV is a page pool indexed by
+            # the shared host-built page table (models/attention.py)
+            kv = PagedKVCache(k=cache["k"], v=cache["v"],
+                              page_table=page_table, length=cache_len)
+        else:
+            kv = KVCache(k=cache["k"], v=cache["v"], length=cache_len)
         out, new_kv = attention(p, h, positions, cfg, cache=kv, quant=quant,
                                 chunk_valid=chunk_valid)
         new_cache = None if new_kv is None else {"k": new_kv.k, "v": new_kv.v}
@@ -294,7 +339,8 @@ def forward(cfg: ModelConfig, params: Params, *,
             quant=False,
             return_stats: bool = False,
             valid_len: Optional[jnp.ndarray] = None,
-            chunk_valid: Optional[jnp.ndarray] = None):
+            chunk_valid: Optional[jnp.ndarray] = None,
+            page_table: Optional[jnp.ndarray] = None):
     """Returns (logits, new_caches). ``caches`` enables decode/prefill mode.
 
     ``quant`` (bool | str | QuantCtx) routes eligible projections through the
@@ -361,7 +407,8 @@ def forward(cfg: ModelConfig, params: Params, *,
             c_i = None if lc is None else lc[i]
             x, nc = _apply_block(cfg, kind, lp[i], x, positions, c_i,
                                  cache_len, bctx, valid_len=valid_len,
-                                 chunk_valid=chunk_valid)
+                                 chunk_valid=chunk_valid,
+                                 page_table=page_table)
             new_cs.append(nc)
         traffic = None
         if return_stats:

@@ -20,6 +20,8 @@ Kinds:
   ``ecd``   — MoE expert buffers (experts, capacity, d): experts on TP (EP).
   ``cache`` — KV cache (batch, seq, kv_heads, hd): seq on DP for
               long-context decode (batch=1 there), else batch on DP.
+  ``pool``  — paged-KV page pool (pages, page_len, kv_heads, hd): pages
+              on DP (the batch role for paged serving).
   ``bshp``/``bchll``/``bchpn`` — SSD tensors: ssm-heads on TP.
 """
 
@@ -46,6 +48,11 @@ _KIND_LAYOUT = {
     "bchll": ("b", None, "m", None, None),
     "bchpn": ("b", None, "m", None, None),
     "cache": ("b", "cs", None, None),
+    # paged KV page pool (pages, page_len, kv_heads, hd): pages on the DP
+    # axes — the page dim plays the batch role (every slot's rows live in
+    # its pages), and the in-page token dim is never sharded so (page,
+    # offset) indexing needs no sharded-axis reshape
+    "pool": ("b", None, None, None),
     # channels-REPLICATED (B, S, C): used with force=True to pin tensors
     # whose channel axis is about to be concat/split (the mamba conv window)
     "btc": ("b", None, None),

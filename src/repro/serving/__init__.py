@@ -4,11 +4,14 @@ from repro.serving.engine import (clear_generate_cache, generate_fn,
                                   make_slot_prefill, make_slot_prefill_chunk,
                                   make_slot_serve_step,
                                   reference_generate, set_generate_cache_size)
+from repro.serving.kvpool import (PagePool, PrefixHit, RadixCache,
+                                  blocks_for_tokens)
 from repro.serving.scheduler import (Request, RequestResult, ServeScheduler,
                                      bucket_for, round_pool_len)
 __all__ = ["clear_generate_cache", "generate_fn", "greedy_generate",
            "make_decode_loop", "make_prefill_step", "make_serve_step",
            "make_slot_prefill", "make_slot_prefill_chunk",
            "make_slot_serve_step", "reference_generate",
-           "set_generate_cache_size", "Request", "RequestResult",
+           "set_generate_cache_size", "PagePool", "PrefixHit",
+           "RadixCache", "blocks_for_tokens", "Request", "RequestResult",
            "ServeScheduler", "bucket_for", "round_pool_len"]

@@ -20,7 +20,10 @@ Slot-pool serving (``serving/scheduler.py``) builds on the per-slot step
 builders: ``make_slot_prefill`` (bucketed right-padded prefill),
 ``make_slot_prefill_chunk`` (chunked prefill — one fixed-shape prompt chunk
 per prefilling slot written straight into the pool, DESIGN.md §Chunked
-prefill), and ``make_slot_serve_step`` (slot-masked decode).
+prefill), and ``make_slot_serve_step`` (slot-masked decode).  The chunk and
+decode builders take ``paged=True`` to serve the paged KV pool instead of
+dense slabs — same math over page-gathered views, an extra ``page_table``
+argument (DESIGN.md §Paged KV + prefix cache).
 
 Every step builder is **mesh-native**: pass ``mesh=`` (plus optional
 ``in_shardings`` / ``out_shardings`` pytrees) and the returned callable is
@@ -182,11 +185,18 @@ def _mask_recurrent_rows(layers, prev_layers, rows):
 
 
 def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
-                         with_stats: bool = False, *,
+                         with_stats: bool = False, *, paged: bool = False,
                          mesh=None, in_shardings=None, out_shardings=None):
     """``(params, caches, tokens (B, 1), active (B,)) -> (logits, caches
     [, stats])``: the slot-pool decode step for continuous batching
     (``serving/scheduler.py``).
+
+    ``paged=True`` appends a ``page_table (B, n_blocks)`` argument and
+    expects the attention cache leaves in page-pool form
+    (``init_paged_pool``): KV reads gather the slot's pages, the
+    new-token write scatters into its tail page, and everything else —
+    length freezing, SSM-state masking — is identical to the dense path
+    (DESIGN.md §Paged KV + prefix cache).
 
     The batch shape is the fixed slot pool, so *every* row computes each
     step; ``active`` masks the bookkeeping — an inactive slot's cache
@@ -205,9 +215,10 @@ def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
     """
     ctx = as_quant_ctx(quant, default_backend="pallas")
 
-    def slot_step(params, caches, tokens, active):
+    def slot_step(params, caches, tokens, active, page_table=None):
         out = forward(cfg, params, tokens=tokens, caches=caches,
-                      quant=ctx, return_stats=with_stats)
+                      quant=ctx, return_stats=with_stats,
+                      page_table=page_table)
         if with_stats:
             logits, new_caches, stats = out
         else:
@@ -220,6 +231,11 @@ def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
         if with_stats:
             return logits[:, -1], new_caches, stats
         return logits[:, -1], new_caches
+
+    if paged:
+        def paged_step(params, caches, tokens, active, page_table):
+            return slot_step(params, caches, tokens, active, page_table)
+        return _maybe_shard(paged_step, mesh, in_shardings, out_shardings)
     return _maybe_shard(slot_step, mesh, in_shardings, out_shardings)
 
 
@@ -250,7 +266,7 @@ def make_slot_prefill(cfg: ModelConfig, quant: QuantFlag = False, *,
 
 
 def make_slot_prefill_chunk(cfg: ModelConfig, quant: QuantFlag = False,
-                            with_stats: bool = False, *,
+                            with_stats: bool = False, *, paged: bool = False,
                             mesh=None, in_shardings=None, out_shardings=None):
     """``(params, pool, pool_logits, tokens (B, chunk_len), chunk_valid (B,),
     fresh (B,), finishing (B,)) -> (logits (B, V), pool[, stats])``: ONE
@@ -280,11 +296,17 @@ def make_slot_prefill_chunk(cfg: ModelConfig, quant: QuantFlag = False,
     decode).  ``with_stats=True`` appends the chunk forward's plane-traffic
     stats dict — the scheduler attributes it to the rows prefilling at that
     tick.  ``mesh=`` jits with the given shardings (:func:`jit_sharded`).
+    ``paged=True`` appends a ``page_table`` argument and expects page-pool
+    attention caches (``init_paged_pool``); slab writes scatter per page,
+    pad positions land in the trash page instead of writing back their own
+    bytes, and prefix-hit admissions enter with ``fresh=False`` and their
+    cache ``length`` pre-set to the hit boundary — the chunk then ingests
+    only the prompt SUFFIX (DESIGN.md §Paged KV + prefix cache).
     """
     ctx = as_quant_ctx(quant, default_backend="xla")
 
     def chunk_step(params, pool, pool_logits, tokens, chunk_valid, fresh,
-                   finishing):
+                   finishing, page_table=None):
         length = jnp.where(fresh, 0, pool["length"])
         zeros = tuple({k: jnp.zeros_like(v) for k, v in c.items()}
                       if "ssm" in c else c for c in pool["layers"])
@@ -292,7 +314,8 @@ def make_slot_prefill_chunk(cfg: ModelConfig, quant: QuantFlag = False,
                                                  jnp.logical_not(fresh)),
                   "length": length}
         out = forward(cfg, params, tokens=tokens, caches=caches, quant=ctx,
-                      chunk_valid=chunk_valid, return_stats=with_stats)
+                      chunk_valid=chunk_valid, return_stats=with_stats,
+                      page_table=page_table)
         if with_stats:
             logits, new_caches, stats = out
         else:
@@ -306,6 +329,13 @@ def make_slot_prefill_chunk(cfg: ModelConfig, quant: QuantFlag = False,
         if with_stats:
             return new_logits, new_caches, stats
         return new_logits, new_caches
+
+    if paged:
+        def paged_chunk(params, pool, pool_logits, tokens, chunk_valid,
+                        fresh, finishing, page_table):
+            return chunk_step(params, pool, pool_logits, tokens,
+                              chunk_valid, fresh, finishing, page_table)
+        return _maybe_shard(paged_chunk, mesh, in_shardings, out_shardings)
     return _maybe_shard(chunk_step, mesh, in_shardings, out_shardings)
 
 

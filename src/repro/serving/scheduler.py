@@ -39,6 +39,21 @@ where QeiHaN's plane-skipping pays (PAPER §VI; DESIGN.md §Scheduler):
   ``element_traffic_fraction``; the scheduler attributes each step's
   fractions to the requests active at that step and reports the per-request
   mean.
+* **Paged KV pool** (``paged=True``) — attention KV moves from dense
+  per-slot ``(max_len, ...)`` slabs into a shared pool of fixed-size
+  pages (``models.model.init_paged_pool``) indexed through host-side
+  per-slot page tables (``serving/kvpool.py``): writes scatter at
+  (page, offset), reads gather each slot's pages into its dense logical
+  view and run the SAME masked einsums — tokens bit-equal to the dense
+  scheduler on prefix-free traffic.  Pool exhaustion waits for in-flight
+  retirements, or resolves through the ``oversize`` policy when idle.
+* **Radix prefix cache** (``prefix_cache=True``) — retired prompts donate
+  their whole-page KV blocks to a radix tree keyed on token ids; a new
+  request aliases its longest cached prefix (refcounted shared pages,
+  partial tail page via copy-on-write) and ingests only the suffix
+  through the chunked path — the shared tokens skip prefill compute AND
+  cache writes (DESIGN.md §Paged KV + prefix cache).  SSM/hybrid models
+  reuse hits via bounded-LRU state snapshots at page-aligned boundaries.
 * **Mesh-native** — pass ``mesh=`` and the slot pool is allocated
   device-sharded exactly once (batch on ``data``, kv-seq / ssm-heads on
   ``model``, per-slot ``(B,)`` lengths on ``data`` —
@@ -67,8 +82,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import ModelConfig, init_caches
+from repro.models.model import ModelConfig, init_caches, init_paged_pool
 from repro.serving import engine
+from repro.serving.kvpool import (TRASH_PAGE, PagePool, RadixCache,
+                                  blocks_for_tokens)
 
 DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
 
@@ -136,6 +153,13 @@ class _Slot:
     phase: str = "decode"               # "prefill" | "decode"
     prefill_pos: int = 0                # prompt tokens ingested so far
     first_token_time: float = float("nan")
+    # paged mode: every page this slot holds a reference on (fresh allocs,
+    # shared prefix pages, COW copies), the prefix-hit length it was
+    # admitted with, and the SSM/conv state snapshot at the cacheable
+    # prompt boundary (hybrid models, captured opportunistically)
+    pages: List[int] = dataclasses.field(default_factory=list)
+    hit_len: int = 0
+    snapshot: Optional[tuple] = None
 
 
 class ServeScheduler:
@@ -159,6 +183,14 @@ class ServeScheduler:
     interleaved with decode for the other slots; ``chunked="always"``
     chunks every prompt (maximal interleaving / bounded per-tick latency).
     ``max_len`` must be a multiple of ``chunk_len``.
+
+    ``paged=True`` swaps the dense per-slot KV slabs for the shared page
+    pool (``page_len`` tokens per page, ``n_pages`` total — default sizes
+    every slot fully resident plus prefix-cache headroom; ``max_len`` must
+    be a multiple of ``page_len``); ``prefix_cache=True`` (requires paged)
+    adds radix-tree prefix reuse with ``min_prefix_hit`` (default
+    ``page_len``) as the smallest hit worth taking and ``snapshot_limit``
+    bounding the SSM-state snapshots hybrid models need per hit.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
@@ -172,7 +204,13 @@ class ServeScheduler:
                  mesh=None,
                  oversize: str = "reject",
                  chunked="off",
-                 chunk_len: Optional[int] = None):
+                 chunk_len: Optional[int] = None,
+                 paged: bool = False,
+                 page_len: int = 16,
+                 n_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 snapshot_limit: int = 8,
+                 min_prefix_hit: Optional[int] = None):
         if cfg.frontend != "none":
             raise ValueError("ServeScheduler serves token-id models only "
                              f"(frontend={cfg.frontend!r})")
@@ -191,7 +229,15 @@ class ServeScheduler:
             raise ValueError(f"chunked={chunked!r}: expected 'off', 'auto', "
                              f"or 'always'")
         chunk_len = int(buckets[0] if chunk_len is None else chunk_len)
-        if chunked != "off":
+        paged = bool(paged)
+        prefix_cache = bool(prefix_cache)
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache=True requires paged=True (prefix "
+                             "hits alias shared pages)")
+        # prefix-hit admissions ingest the prompt SUFFIX through the chunked
+        # path, so the chunk programs exist whenever they might be needed
+        needs_chunk_programs = chunked != "off" or prefix_cache
+        if needs_chunk_programs:
             if not 1 <= chunk_len <= max_len:
                 raise ValueError(f"chunk_len={chunk_len} must be in "
                                  f"[1, max_len={max_len}]")
@@ -201,6 +247,39 @@ class ServeScheduler:
                 # dynamic_update_slice clamping (which would misalign rows)
                 raise ValueError(f"max_len={max_len} must be a multiple of "
                                  f"chunk_len={chunk_len}")
+        if paged:
+            page_len = int(page_len)
+            if page_len < 1:
+                raise ValueError(f"page_len={page_len} must be >= 1")
+            if max_len % page_len:
+                # the gathered per-slot view (blocks * page_len) must equal
+                # max_len exactly for dense-slab bit-equality
+                raise ValueError(f"max_len={max_len} must be a multiple of "
+                                 f"page_len={page_len}")
+            max_blocks = max_len // page_len
+            if n_pages is None:
+                # every slot fully resident, plus prefix-cache retention
+                # headroom for one max-size prompt, plus the trash page
+                n_pages = (max_slots * max_blocks + 1
+                           + (max_blocks if prefix_cache else 0))
+                if mesh is not None:
+                    # round up to the data-axis size so the pages-on-data
+                    # sharding actually engages (a non-divisible page dim
+                    # silently replicates the whole pool on every device);
+                    # an EXPLICIT n_pages is the caller's to align
+                    from repro.launch.mesh import batch_axes
+                    nb = 1
+                    for a in batch_axes(mesh):
+                        nb *= mesh.shape[a]
+                    n_pages = -(-n_pages // nb) * nb
+            n_pages = int(n_pages)
+            if n_pages < 2:
+                raise ValueError(f"n_pages={n_pages}: need >= 2 (page 0 is "
+                                 f"the reserved trash page)")
+            # NB a pool SMALLER than one full slot (max_blocks + 1 pages) is
+            # legal: requests that can never fit it resolve through the
+            # oversize policy at admission (reject/truncate/raise), so an
+            # under-provisioned pool degrades per-request, never crashes
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -213,6 +292,13 @@ class ServeScheduler:
         self.oversize = oversize
         self.chunked = chunked
         self.chunk_len = chunk_len
+        self.paged = paged
+        self.page_len = page_len if paged else 0
+        self.prefix_cache = prefix_cache
+        self._has_ssm = any(k.split("_")[0] == "mamba" for k in cfg.pattern)
+        self.min_prefix_hit = int(page_len if min_prefix_hit is None
+                                  else min_prefix_hit) if paged else 0
+        self._needs_chunk_programs = needs_chunk_programs
 
         # the generate-program LRU serves the per-request parity / baseline
         # path (greedy_generate): size it so one program per (bucket x
@@ -227,8 +313,26 @@ class ServeScheduler:
         engine.set_generate_cache_size(generate_cache_size)
 
         # --- persistent pool (allocated exactly once) ----------------------
-        self._pool = init_caches(cfg, max_slots, max_len, dtype=cfg.dtype,
-                                 per_slot=True)
+        if paged:
+            self.max_blocks = max_blocks = max_len // page_len
+            self.n_pages = n_pages
+            self._pool = init_paged_pool(cfg, max_slots, max_len, n_pages,
+                                         page_len, dtype=cfg.dtype)
+            self._pages = PagePool(n_pages, page_len)
+            # host-side page tables, one row per slot; entry 0 = trash page
+            self._table = np.zeros((max_slots, max_blocks), np.int32)
+            self._radix = (RadixCache(self._pages,
+                                      snapshot_limit=snapshot_limit)
+                           if prefix_cache else None)
+            # prefix-cache observability (serve_bench --prefix-trace):
+            # cached_tokens prompt tokens were served straight from shared
+            # pages — their prefill compute AND cache writes were skipped
+            self.prefix_stats = {"prompt_tokens": 0, "cached_tokens": 0,
+                                 "prefill_tokens": 0}
+        else:
+            self._pool = init_caches(cfg, max_slots, max_len, dtype=cfg.dtype,
+                                     per_slot=True)
+            self._pages = self._radix = None
         self._logits = jnp.zeros((max_slots, cfg.vocab_size), cfg.dtype)
         self._active = np.zeros((max_slots,), bool)
         self._slots: List[Optional[_Slot]] = [None] * max_slots
@@ -244,7 +348,8 @@ class ServeScheduler:
         # every later tick donates it in place.
         if mesh is not None:
             from repro.launch.shardings import serve_shardings
-            spec = serve_shardings(mesh, params, self._pool, batch=max_slots)
+            spec = serve_shardings(mesh, params, self._pool, batch=max_slots,
+                                   paged=self.paged)
             rep = spec["replicated"]
             self.params = params = jax.device_put(params, spec["params"])
             self._pool = jax.device_put(self._pool, spec["caches"])
@@ -252,26 +357,37 @@ class ServeScheduler:
             # batch-1 prefill outputs replicate (a 1-row batch divides no
             # data axis); the slot write scatters them into the sharded pool
             cache1_sh = jax.tree.map(lambda _: rep, self._pool)
+            # paged mode threads the host-built (B, n_blocks) page table
+            # through every device program; its rows ride the slot batch
+            # sharding like the token slab
+            pt = (spec["tokens"],) if self.paged else ()
             sh = dict(
                 prefill_in=(spec["params"], rep, rep),
                 prefill_out=(rep, cache1_sh),
                 write_in=(spec["caches"], cache1_sh, spec["logits"], rep,
-                          rep),
+                          rep) + ((rep, rep) if self.paged else ()),
                 write_out=(spec["caches"], spec["logits"]),
                 tick_in=(spec["params"], spec["caches"], spec["logits"],
-                         spec["active"]),
+                         spec["active"]) + pt,
                 tick_out=(spec["logits"], spec["caches"], rep, rep),
                 # chunked prefill: the (B, chunk_len) token slab rides the
                 # per-slot row sharding (batch on `data`, like the pool);
                 # the (B,) valid/fresh/finishing flag vectors ride `active`'s
                 chunk_in=(spec["params"], spec["caches"], spec["logits"],
                           spec["tokens"], spec["active"], spec["active"],
-                          spec["active"]),
+                          spec["active"]) + pt,
                 chunk_out=(spec["logits"], spec["caches"], rep),
                 mixed_in=(spec["params"], spec["caches"], spec["logits"],
                           spec["active"], spec["tokens"], spec["active"],
-                          spec["active"], spec["active"]),
+                          spec["active"], spec["active"]) + pt,
                 mixed_out=(spec["logits"], spec["caches"], rep, rep, rep),
+                cow_in=(spec["caches"], rep, rep),
+                cow_out=spec["caches"],
+                snap_in=(spec["caches"], rep),
+                snap_out=rep,
+                hit_in=(spec["caches"], rep, rep),
+                hit_out=spec["caches"],
+                hit_snap_in=(spec["caches"], rep, rep, rep),
             )
         else:
             sh = collections.defaultdict(lambda: None)
@@ -289,34 +405,75 @@ class ServeScheduler:
             prefill, mesh, in_shardings=sh["prefill_in"],
             out_shardings=sh["prefill_out"])
 
-        # slot write: shape-independent of the bucket -> exactly one program
-        def write_slot(pool, slot_cache, pool_logits, slot_logits, i):
-            layers = jax.tree.map(
-                lambda p, s: jax.lax.dynamic_update_slice_in_dim(
-                    p, s.astype(p.dtype), i, axis=1),
-                pool["layers"], slot_cache["layers"])
-            length = jax.lax.dynamic_update_slice_in_dim(
-                pool["length"], slot_cache["length"].astype(jnp.int32),
-                i, axis=0)
+        # slot write: shape-independent of the bucket -> exactly one program.
+        # The paged variant scatters the freshly-prefilled dense 1-row cache
+        # into the slot's pages — positions < true_len land at (page_row[
+        # p // page_len], p % page_len), the rest go to the trash page —
+        # while SSM/conv state and logits keep the dense per-slot write.
+        def write_slot(pool, slot_cache, pool_logits, slot_logits, i,
+                      page_row=None, true_len=None):
+            if self.paged:
+                pl = self.page_len
+                pos = jnp.arange(max_len, dtype=jnp.int32)
+                valid = pos < true_len
+                page = jnp.where(valid, page_row[pos // pl], TRASH_PAGE)
+                off = jnp.where(valid, pos % pl, 0)
+                layers = []
+                for c_pool, c_slot in zip(pool["layers"],
+                                          slot_cache["layers"]):
+                    if "ssm" in c_pool:
+                        layers.append({k: jax.lax.dynamic_update_slice_in_dim(
+                            c_pool[k], c_slot[k].astype(c_pool[k].dtype),
+                            i, axis=1) for k in c_pool})
+                    else:
+                        layers.append({k: c_pool[k].at[:, page, off].set(
+                            c_slot[k][:, 0].astype(c_pool[k].dtype))
+                            for k in ("k", "v")})
+                layers = tuple(layers)
+                length = jax.lax.dynamic_update_slice_in_dim(
+                    pool["length"], true_len[None].astype(jnp.int32),
+                    i, axis=0)
+            else:
+                layers = jax.tree.map(
+                    lambda p, s: jax.lax.dynamic_update_slice_in_dim(
+                        p, s.astype(p.dtype), i, axis=1),
+                    pool["layers"], slot_cache["layers"])
+                length = jax.lax.dynamic_update_slice_in_dim(
+                    pool["length"], slot_cache["length"].astype(jnp.int32),
+                    i, axis=0)
             logits = jax.lax.dynamic_update_slice_in_dim(
                 pool_logits, slot_logits.astype(pool_logits.dtype),
                 i, axis=0)
             return {"layers": layers, "length": length}, logits
 
-        self._write = engine.jit_sharded(
-            write_slot, mesh, in_shardings=sh["write_in"],
-            out_shardings=sh["write_out"], donate_argnums=(0, 2))
+        if self.paged:
+            def write_slot_paged(pool, slot_cache, pool_logits, slot_logits,
+                                 i, page_row, true_len):
+                return write_slot(pool, slot_cache, pool_logits, slot_logits,
+                                  i, page_row, true_len)
+            self._write = engine.jit_sharded(
+                write_slot_paged, mesh, in_shardings=sh["write_in"],
+                out_shardings=sh["write_out"], donate_argnums=(0, 2))
+        else:
+            self._write = engine.jit_sharded(
+                write_slot, mesh, in_shardings=sh["write_in"],
+                out_shardings=sh["write_out"], donate_argnums=(0, 2))
 
         # tick: scan tick_steps slot-masked greedy steps -> one program.
         # tick_body is shared verbatim by the standalone tick and the mixed
-        # chunk+decode program, so the decode math is one code path.
-        step = engine.make_slot_serve_step(cfg, quant, with_stats=with_stats)
+        # chunk+decode program, so the decode math is one code path.  In
+        # paged mode every program additionally takes the host-built page
+        # table (constant within a tick: pages are allocated at admission).
+        step = engine.make_slot_serve_step(cfg, quant, with_stats=with_stats,
+                                           paged=self.paged)
 
-        def tick_body(params, pool, logits, active):
+        def tick_body(params, pool, logits, active, page_table=None):
+            extra = (page_table,) if self.paged else ()
+
             def body(carry, _):
                 lg, cs = carry
                 tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-                out = step(params, cs, tok[:, None], active)
+                out = step(params, cs, tok[:, None], active, *extra)
                 if with_stats:
                     lg, cs, stats = out
                     frac = jnp.stack([stats["plane_traffic_fraction"],
@@ -330,23 +487,31 @@ class ServeScheduler:
                 body, (logits, pool), None, length=tick_steps)
             return lg, cs, jnp.swapaxes(toks, 0, 1), fracs
 
-        self._tick = engine.jit_sharded(
-            tick_body, mesh, in_shardings=sh["tick_in"],
-            out_shardings=sh["tick_out"], donate_argnums=(1,))
+        if self.paged:
+            def tick_paged(params, pool, logits, active, page_table):
+                return tick_body(params, pool, logits, active, page_table)
+            self._tick = engine.jit_sharded(
+                tick_paged, mesh, in_shardings=sh["tick_in"],
+                out_shardings=sh["tick_out"], donate_argnums=(1,))
+        else:
+            self._tick = engine.jit_sharded(
+                tick_body, mesh, in_shardings=sh["tick_in"],
+                out_shardings=sh["tick_out"], donate_argnums=(1,))
 
         # chunked prefill: ONE fixed (B, chunk_len) slab shape regardless of
         # prompt length — the chunk-only program covers prefill-only ticks,
         # the mixed program runs chunk ingestion AND the decode scan in one
         # jitted dispatch so decode never drains while a long prompt ingests
         self._chunk = self._mixed = None
-        if self.chunked != "off":
+        if self._needs_chunk_programs:
             chunk_step = engine.make_slot_prefill_chunk(
-                cfg, quant, with_stats=with_stats)
+                cfg, quant, with_stats=with_stats, paged=self.paged)
 
             def chunk_body(params, pool, logits, tokens, valid, fresh,
-                           finishing):
+                           finishing, page_table=None):
+                extra = (page_table,) if self.paged else ()
                 out = chunk_step(params, pool, logits, tokens, valid, fresh,
-                                 finishing)
+                                 finishing, *extra)
                 if with_stats:
                     lg, cs, stats = out
                     cfrac = jnp.stack([stats["plane_traffic_fraction"],
@@ -357,18 +522,100 @@ class ServeScheduler:
                 return lg, cs, cfrac
 
             def mixed_tick(params, pool, logits, active, tokens, valid,
-                           fresh, finishing):
+                           fresh, finishing, page_table=None):
                 lg, cs, cfrac = chunk_body(params, pool, logits, tokens,
-                                           valid, fresh, finishing)
-                lg, cs, toks, fracs = tick_body(params, cs, lg, active)
+                                           valid, fresh, finishing,
+                                           page_table)
+                lg, cs, toks, fracs = tick_body(params, cs, lg, active,
+                                                page_table)
                 return lg, cs, toks, fracs, cfrac
 
-            self._chunk = engine.jit_sharded(
-                chunk_body, mesh, in_shardings=sh["chunk_in"],
-                out_shardings=sh["chunk_out"], donate_argnums=(1,))
-            self._mixed = engine.jit_sharded(
-                mixed_tick, mesh, in_shardings=sh["mixed_in"],
-                out_shardings=sh["mixed_out"], donate_argnums=(1,))
+            if self.paged:
+                def chunk_paged(params, pool, logits, tokens, valid, fresh,
+                                finishing, page_table):
+                    return chunk_body(params, pool, logits, tokens, valid,
+                                      fresh, finishing, page_table)
+
+                def mixed_paged(params, pool, logits, active, tokens, valid,
+                                fresh, finishing, page_table):
+                    return mixed_tick(params, pool, logits, active, tokens,
+                                      valid, fresh, finishing, page_table)
+                self._chunk = engine.jit_sharded(
+                    chunk_paged, mesh, in_shardings=sh["chunk_in"],
+                    out_shardings=sh["chunk_out"], donate_argnums=(1,))
+                self._mixed = engine.jit_sharded(
+                    mixed_paged, mesh, in_shardings=sh["mixed_in"],
+                    out_shardings=sh["mixed_out"], donate_argnums=(1,))
+            else:
+                self._chunk = engine.jit_sharded(
+                    chunk_body, mesh, in_shardings=sh["chunk_in"],
+                    out_shardings=sh["chunk_out"], donate_argnums=(1,))
+                self._mixed = engine.jit_sharded(
+                    mixed_tick, mesh, in_shardings=sh["mixed_in"],
+                    out_shardings=sh["mixed_out"], donate_argnums=(1,))
+
+        # paged-only device helpers: copy-on-write page duplication (the
+        # partially-matching tail page of a prefix hit is copied into a page
+        # the slot owns exclusively before any write can touch it), the
+        # SSM-state snapshot gather (prefix-cache donors on hybrid models),
+        # and the prefix-hit admission write (length + snapshot restore).
+        self._cow = self._snap = None
+        if self.paged:
+            def cow_pages(pool, src, dst):
+                layers = []
+                for c in pool["layers"]:
+                    if "ssm" in c:
+                        layers.append(c)
+                    else:
+                        layers.append({k: c[k].at[:, dst].set(
+                            jax.lax.dynamic_slice_in_dim(
+                                c[k], src, 1, axis=1)[:, 0])
+                            for k in ("k", "v")})
+                return {"layers": tuple(layers), "length": pool["length"]}
+
+            self._cow = engine.jit_sharded(
+                cow_pages, mesh, in_shardings=sh["cow_in"],
+                out_shardings=sh["cow_out"], donate_argnums=(0,))
+
+            def snap_slot(pool, i):
+                out = []
+                for c in pool["layers"]:
+                    if "ssm" in c:
+                        out.append({k: jax.lax.dynamic_slice_in_dim(
+                            c[k], i, 1, axis=1) for k in c})
+                return tuple(out)
+
+            self._snap = engine.jit_sharded(
+                snap_slot, mesh, in_shardings=sh["snap_in"],
+                out_shardings=sh["snap_out"])
+
+            def admit_hit(pool, i, hit_len, snaps=None):
+                length = jax.lax.dynamic_update_slice_in_dim(
+                    pool["length"], hit_len[None].astype(jnp.int32),
+                    i, axis=0)
+                layers = []
+                si = 0
+                for c in pool["layers"]:
+                    if "ssm" in c and snaps is not None:
+                        sn = snaps[si]
+                        si += 1
+                        layers.append(
+                            {k: jax.lax.dynamic_update_slice_in_dim(
+                                c[k], sn[k].astype(c[k].dtype), i, axis=1)
+                             for k in c})
+                    else:
+                        layers.append(c)
+                return {"layers": tuple(layers), "length": length}
+
+            self._admit_hit_plain = engine.jit_sharded(
+                lambda pool, i, hit_len: admit_hit(pool, i, hit_len),
+                mesh, in_shardings=sh["hit_in"],
+                out_shardings=sh["hit_out"], donate_argnums=(0,))
+            self._admit_hit_snap = engine.jit_sharded(
+                lambda pool, i, hit_len, snaps: admit_hit(pool, i, hit_len,
+                                                          snaps),
+                mesh, in_shardings=sh["hit_snap_in"],
+                out_shardings=sh["hit_out"], donate_argnums=(0,))
 
     # ------------------------------------------------------------------ API
 
@@ -442,21 +689,75 @@ class ServeScheduler:
         stats = {"prefill": size(self._prefill),
                  "tick": size(self._tick),
                  "write_slot": size(self._write)}
-        if self.chunked != "off":
+        if self._needs_chunk_programs:
             # ONE chunk-slab shape each, regardless of prompt lengths
             stats["chunk"] = size(self._chunk)
             stats["mixed"] = size(self._mixed)
         return stats
+
+    def prefix_cache_stats(self) -> Dict[str, float]:
+        """Prefix-cache effectiveness over everything admitted so far:
+        ``hit_rate`` is the fraction of prompt tokens served straight from
+        shared pages — each such token skipped its prefill compute AND its
+        per-layer cache writes (``cache_write_saved_frac`` is the same
+        ratio, named for what it means in paper terms: PAPER §VI counts
+        avoided memory accesses; DESIGN.md §Paged KV + prefix cache)."""
+        if not self.paged:
+            raise ValueError("prefix_cache_stats: not a paged scheduler")
+        total = max(self.prefix_stats["prompt_tokens"], 1)
+        cached = self.prefix_stats["cached_tokens"]
+        out = {
+            "prompt_tokens": float(self.prefix_stats["prompt_tokens"]),
+            "cached_tokens": float(cached),
+            "prefill_tokens": float(self.prefix_stats["prefill_tokens"]),
+            "hit_rate": cached / total,
+            "cache_write_saved_frac": cached / total,
+            "pages_in_use": float(self._pages.in_use),
+            "pages_free": float(self._pages.available),
+        }
+        if self._radix is not None:
+            out["lookups"] = float(self._radix.lookups)
+            out["lookup_hits"] = float(self._radix.hits)
+        return out
+
+    def reset_prefix_stats(self) -> None:
+        """Zero the prefix-cache counters (benchmarks call this after their
+        warm-up traffic so the reported ratios cover only the timed trace;
+        cached pages themselves stay resident)."""
+        if not self.paged:
+            raise ValueError("reset_prefix_stats: not a paged scheduler")
+        self.prefix_stats = {k: 0 for k in self.prefix_stats}
+        if self._radix is not None:
+            self._radix.lookups = self._radix.hits = 0
+            self._radix.tokens_hit = 0
 
     def step_tick(self) -> bool:
         """Admit into every free slot, feed one prompt chunk to every
         prefilling slot, run one fused multi-step decode tick for every
         decoding slot — chunk + decode in ONE jitted program when both kinds
         are live — then retire finished requests.  Returns False when there
-        is nothing to do."""
+        is nothing to do.
+
+        Paged admission can *stall*: if the page pool cannot cover the next
+        request even after evicting prefix-cache entries, the request waits
+        at the queue head for in-flight slots to retire (their pages free on
+        retirement); with an idle system the ``oversize`` policy applies
+        instead (reject / truncate / raise) — exhaustion never crashes a
+        live serve loop.
+        """
+        stalled = False
         for i in range(self.max_slots):
-            if not self._active[i] and self._queue:
-                self._admit(i, self._queue.popleft())
+            if stalled:
+                break
+            while not self._active[i] and self._queue:
+                req = self._queue.popleft()
+                st = self._admit(i, req)
+                if st == "wait":
+                    self._queue.appendleft(req)
+                    stalled = True
+                    break
+                # "ok" fills the slot (loop exits); "drop" recorded a
+                # rejection — try the next queued request for this slot
         if not self._active.any():
             return False
 
@@ -464,6 +765,7 @@ class ServeScheduler:
         chunk_rows = [i for i, s in enumerate(self._slots)
                       if s is not None and s.phase == "prefill"]
         valid = np.zeros((self.max_slots,), np.int32)
+        defer = np.zeros((self.max_slots,), bool)
         if chunk_rows:
             tokens = np.zeros((self.max_slots, self.chunk_len), np.int32)
             fresh = np.zeros((self.max_slots,), bool)
@@ -475,22 +777,33 @@ class ServeScheduler:
                 tokens[i, :take] = s.req.prompt[s.prefill_pos:
                                                 s.prefill_pos + take]
                 valid[i] = take
-                fresh[i] = s.prefill_pos == 0
+                fresh[i] = s.prefill_pos == 0 and s.hit_len == 0
                 finishing[i] = s.prefill_pos + take >= s.req.prompt.size
+                # hybrid-model snapshot capture needs the post-prompt SSM
+                # state BEFORE any decode step touches it: when the final
+                # chunk lands exactly on the cacheable (page-aligned) prompt
+                # boundary, hold the row out of this tick's decode scan and
+                # capture after the tick — it starts decoding next tick with
+                # identical tokens (the logits/state don't change)
+                defer[i] = (finishing[i] and self._wants_snapshot(s)
+                            and s.prefill_pos + take
+                            == self._cacheable_len(s.req.prompt.size))
         # a slot whose LAST chunk lands this tick decodes in the same tick:
         # the chunk phase writes its first-token logits before the scan runs
         decode_mask = np.array(
             [s is not None and not s.done
-             and (s.phase == "decode" or (chunk_rows and finishing[i]))
+             and (s.phase == "decode"
+                  or (chunk_rows and finishing[i] and not defer[i]))
              for i, s in enumerate(self._slots)])
 
+        pt = (jnp.asarray(self._table),) if self.paged else ()
         toks_h = fracs_h = cfrac_h = None
         if chunk_rows and decode_mask.any():
             lg, pool, toks, fracs, cfrac = self._mixed(
                 self.params, self._pool, self._logits,
                 jnp.asarray(decode_mask), jnp.asarray(tokens),
                 jnp.asarray(valid), jnp.asarray(fresh),
-                jnp.asarray(finishing))
+                jnp.asarray(finishing), *pt)
             self._logits, self._pool = lg, pool
             toks_h, fracs_h = np.asarray(toks), np.asarray(fracs)
             cfrac_h = np.asarray(cfrac)
@@ -498,13 +811,13 @@ class ServeScheduler:
             lg, pool, cfrac = self._chunk(
                 self.params, self._pool, self._logits, jnp.asarray(tokens),
                 jnp.asarray(valid), jnp.asarray(fresh),
-                jnp.asarray(finishing))
+                jnp.asarray(finishing), *pt)
             self._logits, self._pool = lg, pool
             cfrac_h = np.asarray(cfrac)
         else:
             lg, pool, toks, fracs = self._tick(
                 self.params, self._pool, self._logits,
-                jnp.asarray(decode_mask))
+                jnp.asarray(decode_mask), *pt)
             self._logits, self._pool = lg, pool
             toks_h, fracs_h = np.asarray(toks), np.asarray(fracs)
 
@@ -516,6 +829,13 @@ class ServeScheduler:
             s.prefill_pos += int(valid[i])
             if finishing[i]:
                 s.phase = "decode"
+            if (self._wants_snapshot(s) and s.prefill_pos
+                    == self._cacheable_len(s.req.prompt.size)):
+                # post-tick state is exactly the state at prefill_pos: the
+                # row was held out of (or not yet in) the decode scan, and
+                # inactive rows' recurrent state is masked frozen
+                s.snapshot = self._snap(self._pool,
+                                        jnp.asarray(i, jnp.int32))
             if self.with_stats and cfrac_h is not None:
                 # the chunk forward's batch-aggregate traffic, attributed to
                 # the requests that prefilled this tick (decode steps are
@@ -570,7 +890,38 @@ class ServeScheduler:
             return True
         return self.chunked == "auto" and prompt_len > self.buckets[-1]
 
-    def _admit(self, slot_idx: int, req: Request) -> None:
+    def _wants_snapshot(self, slot: _Slot) -> bool:
+        """Hybrid/SSM models need the recurrent state at the cacheable
+        prompt boundary for a prefix hit to be usable; capture it once,
+        opportunistically, when ingestion lands exactly on that boundary."""
+        return (self._radix is not None and self._has_ssm
+                and slot.snapshot is None)
+
+    def _cacheable_len(self, prompt_len: int) -> int:
+        """Prompt tokens coverable by whole shared pages."""
+        return (prompt_len // self.page_len) * self.page_len
+
+    def _alloc_pages(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` fresh pages, evicting LRU prefix-cache entries
+        if the free list runs short.  All-or-nothing — and eviction only
+        runs when it can actually satisfy the request: an unsatisfiable
+        allocation (oversized request, under-provisioned pool) must not
+        drain the whole prefix cache on its way to being rejected."""
+        got = self._pages.alloc(n)
+        if (got is None and self._radix is not None
+                and self._pages.available + self._radix.evictable_pages()
+                >= n):
+            self._radix.evict(n)
+            got = self._pages.alloc(n)
+        return got
+
+    def _admit(self, slot_idx: int, req: Request) -> str:
+        """Fill ``slot_idx`` with ``req``; returns ``"ok"`` (admitted),
+        ``"wait"`` (paged pool exhausted while other requests are in
+        flight — retry next tick), or ``"drop"`` (request rejected with a
+        per-request error result)."""
+        if self.paged:
+            return self._admit_paged(slot_idx, req)
         length = int(req.prompt.size)
         if self._uses_chunks(length):
             # chunked ingestion: no prefill here — step_tick feeds the
@@ -579,7 +930,14 @@ class ServeScheduler:
             self._slots[slot_idx] = _Slot(req=req,
                                           admitted_tick=self._tick_count,
                                           phase="prefill")
-            return
+            return "ok"
+        self._admit_bucketed(slot_idx, req)
+        return "ok"
+
+    def _admit_bucketed(self, slot_idx: int, req: Request,
+                        page_args: tuple = ()) -> None:
+        """Monolithic bucketed prefill + slot write (dense or paged)."""
+        length = int(req.prompt.size)
         bucket = bucket_for(length, self.buckets)
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :length] = req.prompt
@@ -587,13 +945,131 @@ class ServeScheduler:
                                         jnp.asarray([length], jnp.int32))
         self._pool, self._logits = self._write(
             self._pool, cache1, self._logits, logits1,
-            jnp.asarray(slot_idx, jnp.int32))
+            jnp.asarray(slot_idx, jnp.int32), *page_args)
         self._active[slot_idx] = True
         self._slots[slot_idx] = _Slot(req=req,
                                       admitted_tick=self._tick_count)
 
+    def _admit_paged(self, slot_idx: int, req: Request,
+                     retrying: bool = False) -> str:
+        prompt = req.prompt
+        length = int(prompt.size)
+        pl = self.page_len
+        hit = None
+        if self._radix is not None:
+            # cap the hit at length-1: at least one suffix token must run
+            # through prefill to produce the first decode logits
+            hit = self._radix.lookup(prompt, max_hit=length - 1,
+                                     need_snapshot=self._has_ssm,
+                                     min_hit=self.min_prefix_hit,
+                                     allow_partial=not self._has_ssm)
+        shared = list(hit.pages) if hit is not None else []
+        # hold references on every page the hit aliases (shared blocks AND
+        # the COW source) BEFORE allocating: allocation may evict radix
+        # entries, and the tree's reference may be the only thing keeping
+        # these pages alive — without the hold, eviction could free one
+        # and the allocator hand it back to us as a "fresh" page
+        hold = shared + ([hit.cow_src] if hit is not None
+                         and hit.cow_src is not None else [])
+        self._pages.ref(hold)
+        # worst-case tokens the slot writes: prompt + generation + the junk
+        # tail of the tick in which it finishes (same clamp bound as dense)
+        need_tokens = min(self.max_len,
+                          length + req.max_new + self.tick_steps)
+        n_blocks = blocks_for_tokens(need_tokens, pl)
+        fresh = self._alloc_pages(n_blocks - len(shared))
+        if fresh is None:
+            self._pages.release(hold)    # the pool is untouched again
+            if self._active.any():
+                return "wait"
+            why = (f"page pool exhausted: request needs {n_blocks} pages "
+                   f"({need_tokens} tokens @ page_len={pl}), "
+                   f"{self._pages.available} free of "
+                   f"{self._pages.capacity}")
+            if self.oversize == "raise":
+                raise ValueError(why)
+            if self.oversize == "truncate" and not retrying:
+                # truncate to what the pool could hold after evicting the
+                # prefix cache (the retry's allocation performs the actual
+                # eviction), capped at the slot capacity like dense
+                usable = self._pages.available + (
+                    self._radix.evictable_pages()
+                    if self._radix is not None else 0)
+                fit = min(usable * pl - req.max_new - self.tick_steps,
+                          self.max_len - req.max_new)
+                if fit >= 1:
+                    cut = dataclasses.replace(req, prompt=prompt[-fit:])
+                    return self._admit_paged(slot_idx, cut, retrying=True)
+            now = time.perf_counter()
+            self._results[req.rid] = RequestResult(
+                rid=req.rid, prompt_len=length, tokens=[],
+                finish_reason="rejected", admitted_tick=-1,
+                finished_tick=self._tick_count, error=why,
+                submit_time=req.submit_time, finish_time=now)
+            return "drop"
+        if hit is not None and hit.cow_src is not None:
+            # the partially-matching page is copied into the first fresh
+            # page (it IS block len(shared)); the slot owns the copy
+            # exclusively, so suffix ingestion can overwrite its tail.
+            # The hold reference on the source is dropped after the copy.
+            self._pool = self._cow(self._pool,
+                                   jnp.asarray(hit.cow_src, jnp.int32),
+                                   jnp.asarray(fresh[0], jnp.int32))
+            self._pages.release([hit.cow_src])
+        pages = shared + fresh
+        self._table[slot_idx, :] = TRASH_PAGE
+        self._table[slot_idx, :len(pages)] = pages
+        self.prefix_stats["prompt_tokens"] += length
+        if hit is not None:
+            # restore length (and SSM state, hybrid models) at the hit
+            # boundary, then ingest only the suffix through the chunk path
+            idx = jnp.asarray(slot_idx, jnp.int32)
+            hl = jnp.asarray(hit.length, jnp.int32)
+            if hit.snapshot is not None:
+                self._pool = self._admit_hit_snap(self._pool, idx, hl,
+                                                  hit.snapshot)
+            else:
+                self._pool = self._admit_hit_plain(self._pool, idx, hl)
+            slot = _Slot(req=req, admitted_tick=self._tick_count,
+                         phase="prefill", prefill_pos=hit.length,
+                         hit_len=hit.length)
+            self.prefix_stats["cached_tokens"] += hit.length
+            self.prefix_stats["prefill_tokens"] += length - hit.length
+        elif self._uses_chunks(length):
+            slot = _Slot(req=req, admitted_tick=self._tick_count,
+                         phase="prefill")
+            self.prefix_stats["prefill_tokens"] += length
+        else:
+            self._admit_bucketed(
+                slot_idx, req,
+                page_args=(jnp.asarray(self._table[slot_idx]),
+                           jnp.asarray(length, jnp.int32)))
+            slot = self._slots[slot_idx]
+            self.prefix_stats["prefill_tokens"] += length
+            if (self._wants_snapshot(slot) and length % pl == 0):
+                # page-aligned prompt: the freshly-written slot state IS
+                # the state at the cacheable boundary — snapshot now,
+                # before any decode tick advances it
+                slot.snapshot = self._snap(self._pool,
+                                           jnp.asarray(slot_idx, jnp.int32))
+        slot.pages = pages
+        self._active[slot_idx] = True
+        self._slots[slot_idx] = slot
+        return "ok"
+
     def _retire(self, slot_idx: int) -> None:
         slot = self._slots[slot_idx]
+        if self.paged:
+            if self._radix is not None:
+                # donate the prompt's whole-page blocks to the prefix cache
+                # (existing nodes are re-used, new nodes take their own page
+                # refs) BEFORE releasing the slot's references
+                row = self._table[slot_idx]
+                self._radix.insert(slot.req.prompt,
+                                   lambda bi: int(row[bi]),
+                                   snapshot=slot.snapshot)
+            self._pages.release(slot.pages)
+            self._table[slot_idx, :] = TRASH_PAGE
         n = max(slot.frac_steps, 1)
         self._results[slot.req.rid] = RequestResult(
             rid=slot.req.rid,

@@ -6,7 +6,6 @@ deterministic seeded sweeps, so ``python -m pytest`` stays green on a bare
 ``jax + pytest`` environment.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
 (interpret=True on CPU; same code targets TPU v5e)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

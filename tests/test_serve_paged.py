@@ -1,0 +1,316 @@
+"""Paged-KV serving (ISSUE 5): the paged scheduler must be BIT-EQUAL to the
+dense ServeScheduler on prefix-free traffic (attention + mamba, float +
+quant, bucketed + chunked admission) and TOKEN-EXACT vs per-request
+``greedy_generate`` on prefix hits (whole-page aliasing, partial-block COW,
+SSM snapshot restore).  Pool exhaustion goes through the PR 3
+reject/truncate/raise policies — never a crash — and waits for in-flight
+pages when the system can free them by retiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.models.quantize import quantize_model_params
+from repro.serving import engine
+from repro.serving.scheduler import ServeScheduler
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("smollm_135m").replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 8, 3, 12, 7, 9)]
+    return cfg, params, prompts
+
+
+def _reference(cfg, params, prompt, max_new, quant=False):
+    return np.asarray(engine.greedy_generate(
+        cfg, params, jnp.asarray(prompt)[None], max_new=max_new,
+        quant=quant))[0]
+
+
+def _run(cfg, params, prompts, max_new, **kw):
+    sched = ServeScheduler(cfg, params, **kw)
+    for p in prompts:
+        sched.submit(p, max_new=max_new)
+    return sched, sched.run()
+
+
+def test_paged_bit_equal_dense_prefix_free(setup):
+    """Acceptance: page-gathered reads + per-page scatter writes reproduce
+    the dense slab BIT-FOR-BIT — same admissions, same tokens — including
+    slot reuse (6 requests on 2 slots) and page_len not dividing the
+    prompt lengths (5, 8, 3, ... over page_len=8)."""
+    cfg, params, prompts = setup
+    max_new = 10
+    kw = dict(max_slots=2, max_len=64, buckets=(8, 16), tick_steps=4)
+    _, dense = _run(cfg, params, prompts, max_new, **kw)
+    _, paged = _run(cfg, params, prompts, max_new, paged=True, page_len=8,
+                    **kw)
+    for d, p, prompt in zip(dense, paged, prompts):
+        assert d.tokens == p.tokens
+        np.testing.assert_array_equal(
+            np.asarray(p.tokens), _reference(cfg, params, prompt, max_new))
+
+
+def test_paged_bit_equal_dense_chunked_and_quant(setup):
+    """Chunked (over-bucket prompts) and quantized decode through pages:
+    still bit-equal to the dense chunked scheduler."""
+    cfg, params, prompts = setup
+    rng = np.random.default_rng(3)
+    traffic = prompts[:3] + [rng.integers(0, cfg.vocab_size,
+                                          size=30).astype(np.int32)]
+    qparams = quantize_model_params(cfg, params)
+    kw = dict(max_slots=2, max_len=64, buckets=(8, 16), tick_steps=3,
+              chunked="auto", quant="xla")
+    _, dense = _run(cfg, qparams, traffic, 6, **kw)
+    _, paged = _run(cfg, qparams, traffic, 6, paged=True, page_len=8, **kw)
+    assert all(d.finish_reason == "length" for d in dense)
+    for d, p in zip(dense, paged):
+        assert d.tokens == p.tokens
+
+
+def test_paged_bit_equal_dense_mamba():
+    """SSM arch: dense per-slot recurrent state + paged KV don't interact;
+    tokens stay bit-equal to the dense scheduler."""
+    cfg = get_smoke("mamba2_780m").replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 6, 11)]
+    kw = dict(max_slots=2, max_len=48, buckets=(8, 16), tick_steps=3)
+    _, dense = _run(cfg, params, prompts, 5, **kw)
+    _, paged = _run(cfg, params, prompts, 5, paged=True, page_len=8, **kw)
+    for d, p, prompt in zip(dense, paged, prompts):
+        assert d.tokens == p.tokens
+        np.testing.assert_array_equal(
+            np.asarray(p.tokens), _reference(cfg, params, prompt, 5))
+
+
+def test_prefix_hit_token_exact_and_write_savings(setup):
+    """Shared-prefix traffic: later requests alias the donor's pages (hit
+    = the whole-page prefix), skip that prefill, and still produce the
+    exact per-request greedy_generate tokens."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(2)
+    max_new = 8
+    prefix = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab_size,
+                                                    size=t).astype(np.int32)])
+               for t in (5, 3, 7, 4)]
+    sched, res = _run(cfg, params, prompts, max_new, max_slots=1,
+                      max_len=64, buckets=(8, 16, 32), tick_steps=4,
+                      paged=True, page_len=8, prefix_cache=True)
+    for r, p in zip(res, prompts):
+        assert r.finish_reason == "length"
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), _reference(cfg, params, p, max_new))
+    st = sched.prefix_cache_stats()
+    # requests 1..3 each alias the full 24-token page-aligned prefix
+    assert st["cached_tokens"] == 3 * 24
+    assert st["lookup_hits"] == 3
+    assert st["cache_write_saved_frac"] > 0.5
+
+
+def test_partial_block_cow_hit(setup):
+    """A prefix ending mid-page extends the hit below page granularity by
+    copy-on-write: the shared page is copied into a slot-owned page whose
+    tail the suffix overwrites — the shared original stays intact (the
+    donor's pages still serve later exact-prefix requests)."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(4)
+    # NB not 6: test_serving_fused asserts its max_new=6 generate program
+    # never retraces, and _reference() shares the process-global LRU
+    max_new = 7
+    prefix = rng.integers(0, cfg.vocab_size, size=28).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab_size,
+                                                    size=t).astype(np.int32)])
+               for t in (6, 5, 4)]
+    sched, res = _run(cfg, params, prompts, max_new, max_slots=1,
+                      max_len=64, buckets=(8, 16, 32), tick_steps=4,
+                      paged=True, page_len=8, prefix_cache=True,
+                      chunked="auto")
+    for r, p in zip(res, prompts):
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), _reference(cfg, params, p, max_new))
+    st = sched.prefix_cache_stats()
+    # hits at 24 full-page tokens + 4 COW-extended tokens each
+    assert st["cached_tokens"] == 2 * 28, st
+
+
+def test_mamba_prefix_hit_via_snapshot():
+    """Hybrid/SSM prefix reuse: the donor's recurrent state snapshot at the
+    page-aligned boundary restores into the hitting slot; tokens equal the
+    standalone generate.  chunk_len == page_len keeps every chunk boundary
+    snapshot-eligible."""
+    cfg = get_smoke("mamba2_780m").replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    prompts = [np.concatenate([prefix, rng.integers(0, cfg.vocab_size,
+                                                    size=t).astype(np.int32)])
+               for t in (5, 4, 6)]
+    sched, res = _run(cfg, params, prompts, 6, max_slots=1, max_len=64,
+                      buckets=(8, 16, 32), tick_steps=3, paged=True,
+                      page_len=8, prefix_cache=True, chunked="always",
+                      chunk_len=8)
+    for r, p in zip(res, prompts):
+        np.testing.assert_array_equal(
+            np.asarray(r.tokens), _reference(cfg, params, p, 6))
+    st = sched.prefix_cache_stats()
+    assert st["lookup_hits"] == 2 and st["cached_tokens"] == 2 * 16
+
+
+def test_eviction_under_pressure_during_hit_admission(setup):
+    """A hit admission whose fresh-page allocation must EVICT prefix-cache
+    entries: the evicted donor's pages free up, while the pages the hit
+    itself aliases survive eviction (the admission holds references on
+    them before allocating — regression for the evict-then-alias race).
+    """
+    cfg, params, _ = setup
+    rng = np.random.default_rng(6)
+    prefA = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+    donor_a = np.concatenate([prefA, rng.integers(0, cfg.vocab_size,
+                                                  size=4).astype(np.int32)])
+    donor_b = rng.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    sched = ServeScheduler(cfg, params, max_slots=1, max_len=48,
+                           buckets=(8, 16, 32), tick_steps=2, paged=True,
+                           page_len=8, n_pages=8, prefix_cache=True,
+                           chunked="auto")
+    for p in (donor_a, donor_b):
+        sched.submit(p, max_new=4)
+    sched.run()
+    # tree now holds 2 pages each for A and B; 3 of 7 pages free.  The
+    # next prompt hits A's 16-token prefix and needs 4 fresh pages ->
+    # the allocator must evict B's LRU leaf to satisfy it.
+    probe = np.concatenate([prefA, rng.integers(0, cfg.vocab_size,
+                                                size=20).astype(np.int32)])
+    rid = sched.submit(probe, max_new=4)
+    res = {r.rid: r for r in sched.run()}
+    assert res[rid].finish_reason == "length"
+    np.testing.assert_array_equal(
+        np.asarray(res[rid].tokens), _reference(cfg, params, probe, 4))
+    st = sched.prefix_cache_stats()
+    assert st["cached_tokens"] >= 16            # the hit really aliased A
+
+
+def test_pool_exhaustion_reject_policy(setup):
+    """A pool too small for a queued request while the system is idle
+    REJECTS with a per-request error result (PR 3 policy) instead of
+    crashing or deadlocking; normal requests around it still serve."""
+    cfg, params, prompts = setup
+    sched = ServeScheduler(cfg, params, max_slots=2, max_len=32,
+                           buckets=(8, 16), tick_steps=2, paged=True,
+                           page_len=8, n_pages=5)   # 4 usable pages
+    ok1 = sched.submit(prompts[0], max_new=4)       # needs 2 pages
+    # 16-token prompt + 4 new + 2 tick slack = 22 tokens -> 3 pages; fits
+    # the POOL only when nothing else is resident -> admitted after ok1
+    # retires, not rejected
+    ok2 = sched.submit(prompts[3], max_new=4)
+    res = {r.rid: r for r in sched.run()}
+    assert res[ok1].finish_reason == "length"
+    assert res[ok2].finish_reason == "length"
+    np.testing.assert_array_equal(
+        np.asarray(res[ok2].tokens), _reference(cfg, params, prompts[3], 4))
+
+    # a request that can NEVER fit (the pool is smaller than its page
+    # need even when idle) -> rejected at admission with error, loop alive
+    small = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                           buckets=(8, 16), tick_steps=2, paged=True,
+                           page_len=8, n_pages=3)   # 2 usable pages
+    big = small.submit(prompts[3], max_new=4)       # 12 + 4 + 2 -> 3 pages
+    ok = small.submit(prompts[2], max_new=4)        # 3 + 4 + 2 -> 2 pages
+    out = {r.rid: r for r in small.run()}
+    assert out[big].finish_reason == "rejected"
+    assert "page pool exhausted" in out[big].error
+    assert out[ok].finish_reason == "length"
+
+
+def test_unsatisfiable_alloc_does_not_drain_prefix_cache(setup):
+    """An admission the pool can NEVER satisfy must be rejected without
+    evicting the prefix cache on the way out (eviction only runs when it
+    can actually produce enough pages) — one oversized request must not
+    turn every later admission into a miss."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+
+    def mk(t):
+        tail = rng.integers(0, cfg.vocab_size, size=t).astype(np.int32)
+        return np.concatenate([prefix, tail])
+
+    small = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                           buckets=(8, 16, 32), tick_steps=2, paged=True,
+                           page_len=8, n_pages=4, prefix_cache=True)
+    small.submit(mk(2), max_new=4)        # donor: 18 tok -> 3 pages, fits
+    small.run()
+    assert small._radix.n_pages == 2      # 2 whole-page prompt blocks kept
+    # 26-token prompt needs 4 pages; available(1) + evictable(2) < 4 ->
+    # rejected WITHOUT touching the cache
+    big = small.submit(mk(10), max_new=4)
+    hit_prompt = mk(1)                    # 17 tok: hits the cached prefix
+    ok = small.submit(hit_prompt, max_new=4)
+    out = {r.rid: r for r in small.run()}
+    assert out[big].finish_reason == "rejected"
+    assert small._radix.n_pages == 2      # cache survived the rejection
+    assert out[ok].finish_reason == "length"
+    np.testing.assert_array_equal(
+        np.asarray(out[ok].tokens), _reference(cfg, params, hit_prompt, 4))
+    assert small.prefix_cache_stats()["cached_tokens"] >= 16
+
+
+def test_pool_exhaustion_truncate_and_raise(setup):
+    cfg, params, prompts = setup
+    trunc = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                           buckets=(8, 16), tick_steps=2, paged=True,
+                           page_len=8, n_pages=3, oversize="truncate")
+    rid = trunc.submit(prompts[3], max_new=4)       # needs 3 of 2 pages
+    (r,) = trunc.run()
+    assert r.rid == rid and r.finish_reason == "length"
+    # truncated to the most recent fit tokens: 2*8 - 4 new - 2 slack = 10
+    np.testing.assert_array_equal(
+        np.asarray(r.tokens), _reference(cfg, params, prompts[3][-10:], 4))
+
+    strict = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                            buckets=(8, 16), tick_steps=2, paged=True,
+                            page_len=8, n_pages=3, oversize="raise")
+    strict.submit(prompts[3], max_new=4)
+    with pytest.raises(ValueError, match="page pool exhausted"):
+        strict.run()
+
+
+def test_paged_constructor_validation(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="multiple of"):
+        ServeScheduler(cfg, params, max_slots=1, max_len=30, buckets=(8,),
+                       paged=True, page_len=8)
+    with pytest.raises(ValueError, match="trash page"):
+        ServeScheduler(cfg, params, max_slots=1, max_len=32, buckets=(8,),
+                       paged=True, page_len=8, n_pages=1)
+    with pytest.raises(ValueError, match="requires paged"):
+        ServeScheduler(cfg, params, max_slots=1, max_len=32, buckets=(8,),
+                       prefix_cache=True)
+
+
+def test_eos_retirement_frees_pages(setup):
+    """EOS mid-stream retires the slot and releases its pages back to the
+    allocator; the freed pages serve the next admission."""
+    cfg, params, prompts = setup
+    max_new = 8
+    base = _reference(cfg, params, prompts[0], max_new)
+    eos = int(base[2])
+    sched = ServeScheduler(cfg, params, max_slots=1, max_len=32,
+                           buckets=(8, 16), tick_steps=2, paged=True,
+                           page_len=8, n_pages=5)
+    sched.submit(prompts[0], max_new=max_new, eos_id=eos)
+    sched.submit(prompts[1], max_new=4)
+    r0, r1 = sched.run()
+    assert r0.finish_reason == "eos"
+    np.testing.assert_array_equal(np.asarray(r1.tokens),
+                                  _reference(cfg, params, prompts[1], 4))
+    assert sched._pages.in_use == 0                 # everything released

@@ -3,9 +3,8 @@
 import numpy as np
 import pytest
 
-from repro.simulator import (ALL_ACCELERATORS, NAHID, NEUROCUBE, QEIHAN,
-                             PAPER_WORKLOADS, gaussian_stats, paper_preset,
-                             simulate)
+from repro.simulator import (ALL_ACCELERATORS, PAPER_WORKLOADS,
+                             gaussian_stats, paper_preset, simulate)
 
 
 @pytest.fixture(scope="module")

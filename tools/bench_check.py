@@ -1,0 +1,199 @@
+"""Bench-drift gate: compare fresh ``# json`` bench rows against committed
+baselines with per-metric tolerances.
+
+Baselines live in ``benchmarks/baselines/<bench>.json`` — one file per bench
+pass, captured from the ``# json {...}`` summary line each pass of
+``benchmarks.run --dry`` / ``benchmarks.serve_bench --dry`` emits.  CI's
+``bench-smoke`` job tees the fresh dry-run output to files, runs this
+checker against the baselines, and uploads the fresh JSON as a workflow
+artifact — so every CI run both GATES on drift and accretes a measurement
+trajectory.
+
+Tolerance classes (by row-name pattern):
+
+* **exact** — correctness metrics (``bit_equal``, ``served_frac``,
+  ``hit_rate``, ``lookup_hits``, ``registered_groups``, ...): any change
+  fails the gate.  These are deterministic given the committed seeds; a
+  diff means a behavior change, not noise.
+* **tight** — deterministic-but-float metrics (plane-traffic fractions):
+  small relative tolerance for BLAS/libm variation across runners.
+* **advisory** — throughput / latency (``tok_s``, ``_ms``, ``speedup``):
+  reported, never failed — CI CPUs are too noisy to gate on.
+
+Missing rows (present in the baseline, absent fresh) and missing bench
+passes always fail: structural drift means a metric silently stopped being
+measured.  New rows only warn — refresh the baselines with ``--update``.
+
+Usage::
+
+    python -m benchmarks.run --dry | tee /tmp/run_dry.txt
+    python -m benchmarks.serve_bench --dry | tee /tmp/serve_dry.txt
+    python tools/bench_check.py /tmp/run_dry.txt /tmp/serve_dry.txt
+    python tools/bench_check.py --update /tmp/*.txt   # re-baseline
+"""
+
+import argparse
+import json
+import os
+import re
+import sys
+
+DEFAULT_BASELINE_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks",
+    "baselines",
+)
+
+EXACT = re.compile(
+    r"(bit_equal|served_frac|hit_rate|lookup_hits|saved_frac"
+    r"|registered_groups)"
+)
+TIGHT = re.compile(r"(plane_traffic|element_traffic)")
+TIGHT_RTOL = 0.02
+ADVISORY = re.compile(r"(tok_s|_ms$|_s$|speedup|_us$)")
+
+
+def classify(name):
+    if EXACT.search(name):
+        return "exact"
+    if TIGHT.search(name):
+        return "tight"
+    if ADVISORY.search(name):
+        return "advisory"
+    return "advisory"
+
+
+def parse_json_lines(path):
+    """All ``# json {...}`` summaries in one captured-output file, keyed by
+    their ``bench`` name."""
+    out = {}
+    with open(path) as f:
+        for line in f:
+            if line.startswith("# json "):
+                obj = json.loads(line[len("# json "):])
+                out[obj["bench"]] = obj
+    return out
+
+
+def compare(bench, base_rows, fresh_rows):
+    """Returns (failures, warnings) message lists for one bench pass."""
+    failures, warnings = [], []
+    for name, base in base_rows.items():
+        if name not in fresh_rows:
+            failures.append(f"{bench}: row {name!r} missing from fresh run")
+            continue
+        fresh = fresh_rows[name]
+        if base is None or fresh is None:
+            if (base is None) != (fresh is None):
+                failures.append(
+                    f"{bench}: {name}: nan-ness changed "
+                    f"(baseline={base}, fresh={fresh})"
+                )
+            continue
+        kind = classify(name)
+        if kind == "exact":
+            if abs(fresh - base) > 1e-9:
+                failures.append(
+                    f"{bench}: {name}: exact metric drifted "
+                    f"{base} -> {fresh}"
+                )
+        elif kind == "tight":
+            tol = TIGHT_RTOL * max(abs(base), 1e-9)
+            if abs(fresh - base) > tol:
+                failures.append(
+                    f"{bench}: {name}: drifted beyond {TIGHT_RTOL:.0%} "
+                    f"({base} -> {fresh})"
+                )
+        else:
+            if base and abs(fresh - base) > 0.25 * abs(base):
+                warnings.append(
+                    f"{bench}: {name}: {base:.4g} -> {fresh:.4g} "
+                    f"({(fresh - base) / base:+.0%}, advisory)"
+                )
+    for name in fresh_rows:
+        if name not in base_rows:
+            warnings.append(
+                f"{bench}: new row {name!r} not in baseline "
+                f"(run with --update to adopt)"
+            )
+    return failures, warnings
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="compare fresh bench output against committed baselines"
+    )
+    ap.add_argument(
+        "fresh",
+        nargs="+",
+        help="files holding captured bench stdout (with '# json' lines)",
+    )
+    ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="write/refresh the baseline files from the fresh runs "
+        "instead of checking",
+    )
+    args = ap.parse_args(argv)
+
+    fresh = {}
+    for path in args.fresh:
+        fresh.update(parse_json_lines(path))
+    if not fresh:
+        print("bench_check: no '# json' lines found in inputs", flush=True)
+        return 2
+
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for bench, obj in sorted(fresh.items()):
+            out = os.path.join(args.baseline_dir, f"{bench}.json")
+            with open(out, "w") as f:
+                json.dump(
+                    {"bench": bench, "rows": obj["rows"]},
+                    f,
+                    indent=2,
+                    sort_keys=True,
+                )
+                f.write("\n")
+            print(f"bench_check: wrote {out}")
+        return 0
+
+    failures, warnings = [], []
+    baselines = {
+        fn[: -len(".json")]: os.path.join(args.baseline_dir, fn)
+        for fn in sorted(os.listdir(args.baseline_dir))
+        if fn.endswith(".json")
+    }
+    for bench, path in baselines.items():
+        with open(path) as f:
+            base = json.load(f)
+        if bench not in fresh:
+            failures.append(
+                f"{bench}: baseline exists but the fresh run produced no "
+                f"'# json' summary for it"
+            )
+            continue
+        fails, warns = compare(bench, base["rows"], fresh[bench]["rows"])
+        failures += fails
+        warnings += warns
+    for bench in fresh:
+        if bench not in baselines:
+            warnings.append(
+                f"{bench}: no committed baseline (run with --update)"
+            )
+
+    for w in warnings:
+        print(f"WARN  {w}")
+    for f_ in failures:
+        print(f"FAIL  {f_}")
+    n_rows = sum(len(fresh[b]["rows"]) for b in fresh)
+    print(
+        f"bench_check: {len(baselines)} baselines, {n_rows} fresh rows, "
+        f"{len(failures)} failures, {len(warnings)} warnings"
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,37 +1,60 @@
 """Debug: top collective ops in a saved HLO (loop-scaled)."""
-import re, sys
-sys.path.insert(0, 'src')
-from repro.launch.hlo_analysis import (_split_computations, _type_bytes, _TRIP_RE)
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch.hlo_analysis import (  # noqa: E402 (needs sys.path)
+    _TRIP_RE,
+    _split_computations,
+    _type_bytes,
+)
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
 
 def top(path, k=20):
     hlo = open(path).read()
     comps = _split_computations(hlo)
     entry = comps["__entry__"]
     items = []
+
     def walk(name, mult):
         comp = comps.get(name)
-        if comp is None: return
+        if comp is None:
+            return
         for ins in comp.instrs:
             if ins.op == "while":
                 m = _TRIP_RE.search(ins.line)
                 trips = int(m.group(1)) if m else 1
                 bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
-                if bm: walk(bm.group(1), mult * trips)
+                if bm:
+                    walk(bm.group(1), mult * trips)
                 continue
             if ins.op in ("call", "conditional", "async-start"):
-                for key in ("calls","to_apply","branch_computations"):
+                for key in ("calls", "to_apply", "branch_computations"):
                     mm = re.search(key + r"=\{?([^,}\s]+)", ins.line)
-                    if mm: walk(mm.group(1).strip().lstrip('%'), mult)
+                    if mm:
+                        walk(mm.group(1).strip().lstrip("%"), mult)
                 continue
             base = ins.op
-            for suf in ("-start","-done"):
-                if base.endswith(suf): base = base[:-len(suf)]
-            if base in ("all-reduce","all-gather","reduce-scatter","all-to-all","collective-permute") and not ins.op.endswith("-start"):
+            for suf in ("-start", "-done"):
+                if base.endswith(suf):
+                    base = base[: -len(suf)]
+            if base in _COLLECTIVES and not ins.op.endswith("-start"):
                 rb = _type_bytes(ins.type_str) * mult
                 items.append((rb, base, ins.type_str[:70], mult))
+
     walk(entry.name, 1)
     items.sort(reverse=True)
     for rb, op, t, mult in items[:k]:
-        print(f"{rb/2**30:9.2f} GiB  x{mult:<5} {op:<20} {t}")
+        print(f"{rb / 2**30:9.2f} GiB  x{mult:<5} {op:<20} {t}")
+
 
 top(sys.argv[1])
