@@ -74,8 +74,73 @@ def bench_access_savings_by_distribution() -> List[Row]:
     return rows
 
 
+def _paged_attn_case(b=4, page_len=16, nb=32, g=2, r=2, d=16,
+                     lengths=(512, 300, 64, 17)):
+    """Long-context decode tick: 4 slots over a 512-token table, lengths
+    spread so the dense gather streams 4x32 pages while the kernel walk
+    touches only ceil(len/page_len) per slot."""
+    rng = np.random.default_rng(3)
+    lens = np.asarray(lengths, np.int32)
+    n_pages = 1 + b * nb
+    k = jnp.asarray(rng.standard_normal((n_pages, page_len, g, d)),
+                    jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n_pages, page_len, g, d)),
+                    jnp.float32)
+    table = np.zeros((b, nb), np.int32)
+    nxt = 1
+    for i, ln in enumerate(lens):
+        for j in range(-(-int(ln) // page_len)):
+            table[i, j] = nxt
+            nxt += 1
+    q = jnp.asarray(rng.standard_normal((b, 1, g * r, d)), jnp.float32)
+    return q, k, v, jnp.asarray(table), jnp.asarray(lens), table, lens
+
+
+def paged_attn_gate_rows() -> dict:
+    """The ``paged_attn`` bench-drift rows (benchmarks/baselines/
+    paged_attn.json): ``tokens_bit_equal`` (argmax through a fixed random
+    head — token-level kernel-vs-dense parity, EXACT-gated) and
+    ``gather_saved_frac`` (page reads the table walk avoids vs the dense
+    gather, EXACT-gated — the paper-§IV access-savings image), plus
+    advisory CPU wall times (interpret-mode pallas is expected to be slow
+    here; the claim is traffic, not CPU speed)."""
+    from repro.kernels.paged_attention.ops import (gather_traffic_counts,
+                                                   paged_decode_attention)
+    from repro.kernels.paged_attention.ref import paged_attention_reference
+    q, k, v, table, lens, table_np, lens_np = _paged_attn_case()
+    us_dense = _time(jax.jit(paged_attention_reference), q, k, v, table,
+                     lens, iters=3)
+    ref = paged_attention_reference(q, k, v, table, lens)
+    outs, times = {}, {}
+    for s in (1, 4):
+        times[s] = _time(lambda *a: paged_decode_attention(*a, splits=s),
+                         q, k, v, table, lens, iters=3)
+        outs[s] = paged_decode_attention(q, k, v, table, lens, splits=s)
+    head = jnp.asarray(np.random.default_rng(9).standard_normal(
+        (q.shape[2] * q.shape[3], 64)), jnp.float32)
+
+    def tok(o):
+        return np.asarray(jnp.argmax(o.reshape(o.shape[0], -1) @ head,
+                                     axis=-1))
+    bit = float(all(np.array_equal(tok(ref), tok(o)) for o in outs.values()))
+    touched, total = gather_traffic_counts(table_np, lens_np,
+                                           page_len=k.shape[1])
+    return {"tokens_bit_equal": bit,
+            "gather_saved_frac": 1.0 - touched / total,
+            "dense_gather_us": us_dense,
+            "kernel_split1_us": times[1],
+            "kernel_split4_us": times[4]}
+
+
+def bench_paged_attention() -> List[Row]:
+    rows = paged_attn_gate_rows()
+    return [(f"paged_attn.b4.pl16.nb32.{name}", val, float("nan"))
+            for name, val in rows.items()]
+
+
 ALL_KERNEL_BENCHES = {
     "log2quant": bench_log2_quant,
     "bitplane_matmul": bench_bitplane_matmul,
     "access_savings": bench_access_savings_by_distribution,
+    "paged_attn": bench_paged_attention,
 }

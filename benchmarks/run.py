@@ -53,6 +53,14 @@ def main() -> None:
             {"bench": "run_dry",
              "rows": dict({"registered_groups": float(len(names))},
                           **{n: float(v) for n, v, _ in rows})}))
+        # paged-attention kernel gate (baselines/paged_attn.json): token
+        # parity + gather-traffic savings are EXACT rows, wall times
+        # advisory — cheap enough (<2 s interpreted) to run in the smoke
+        from benchmarks.kernel_bench import paged_attn_gate_rows
+        print("# json " + json.dumps(
+            {"bench": "paged_attn",
+             "rows": {n: float(v)
+                      for n, v in paged_attn_gate_rows().items()}}))
         return
 
     only = set(args.only.split(",")) if args.only else None

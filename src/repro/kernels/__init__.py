@@ -11,5 +11,8 @@ Kernels target TPU v5e; on this CPU container they are validated with
 
 from repro.kernels.log2quant.ops import log2_quantize_pallas
 from repro.kernels.bitplane_matmul.ops import bitplane_matmul_pallas
+from repro.kernels.paged_attention.ops import (merge_split_softmax,
+                                               paged_decode_attention)
 
-__all__ = ["log2_quantize_pallas", "bitplane_matmul_pallas"]
+__all__ = ["log2_quantize_pallas", "bitplane_matmul_pallas",
+           "paged_decode_attention", "merge_split_softmax"]

@@ -1,0 +1,19 @@
+"""Fused paged-attention decode kernel (split-KV flash-decode).
+
+kernel.py — Pallas kernel whose BlockSpec index maps walk the page table
+            directly (scalar-prefetched): per-page K/V block loads +
+            online-softmax (m, l) accumulation, no dense ``pool[table]``
+            gather.
+ops.py    — jit'd wrapper: grouped-query reshape, split-KV padding, the
+            partial-softmax merge, and the gather-traffic accounting.
+ref.py    — dense-gather masked-softmax oracle (the exact math of the
+            scheduler's dense path) the kernel is parity-tested against.
+"""
+
+from repro.kernels.paged_attention.ops import (gather_traffic_counts,
+                                               merge_split_softmax,
+                                               paged_decode_attention)
+from repro.kernels.paged_attention.ref import paged_attention_reference
+
+__all__ = ["paged_decode_attention", "merge_split_softmax",
+           "paged_attention_reference", "gather_traffic_counts"]

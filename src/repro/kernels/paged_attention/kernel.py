@@ -1,0 +1,170 @@
+"""Pallas kernel: paged-attention decode with split-KV flash-decode.
+
+Paper mapping (arXiv 2310.18181; DESIGN.md §Paged attention kernel): the
+paper's §IV thesis is that DNN inference is bounded by *memory accesses*,
+and its in-memory scheme wins by touching only the rows a computation
+actually needs.  The serving-side image of that is this kernel: instead of
+gathering ``pool[table]`` into a dense padded ``(B, max_len, G, D)`` view
+every decode tick (reading ALL allocated pages of every slot, valid or
+not), the BlockSpec index maps below dereference the scalar-prefetched
+page table themselves — block ``j`` of slot ``b`` loads pool page
+``table[b, j]`` directly, so only resident pages ever stream into VMEM and
+nothing is ever re-laid-out densely.
+
+Per (slot, kv-head, split) the kernel walks that split's pages in order
+with the standard online-softmax recurrence (running max ``m``, running
+normalizer ``l``, rescaled accumulator ``acc`` — the same f32 statistics
+``models.attention.flash_attention`` carries over KV chunks):
+
+    s_j  = (q @ k_j^T) / sqrt(D),  masked to  pos < length  with the
+           finite NEG_INF = -1e30 (never -inf: all-masked blocks then
+           yield exp(0)=1 "uniform junk" instead of inf-inf NaNs, and the
+           junk is *exactly* erased later — see below)
+    m'   = max(m, max_k s_j)
+    p    = exp(s_j - m');  corr = exp(m - m')
+    l    = l * corr + sum_k p;   acc = acc * corr + p @ v_j
+
+**Split-KV ("flash-decode", SNIPPETS.md flashdecode idiom)**: the page
+axis is additionally partitioned into ``splits`` contiguous runs mapped to
+a parallel grid axis; each run emits partial ``(acc, m, l)`` and the tiny
+cross-split merge happens outside the kernel
+(``ops.merge_split_softmax``).  A split that holds no valid token
+accumulates uniform junk at ``m = NEG_INF``; the merge weights it by
+``exp(NEG_INF - m_real) == 0.0`` exactly (f32 underflow), so junk splits
+— and trash-page contents in general — are *bitwise* absent from the
+output.  Under a mesh the split axis can ride the ``model`` axis
+(``launch.shardings.split_kv_specs``), so each shard reads only its own
+pages and ships one (B, G, R)-sized statistic triple.
+
+Masking is the single ``pos < length`` predicate: decode queries sit at
+position ``length - 1``, so the dense path's causal mask (``kv_pos <=
+q_pos``) and validity mask (``kv_pos < length``) are the same set.
+
+Grid: ``(B, G, splits, blocks_per_split)``, pages innermost
+(accumulator-friendly, "arbitrary"); q/out blocks are whole (R, D) tiles —
+R and D are small (<= head_dim) so VMEM residency is a few KiB per step.
+On this CPU container the kernel runs in interpret mode (the wrapper
+auto-selects), which lowers to plain traced lax ops — jittable, scannable
+inside the serve tick, and partitionable by GSPMD.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def _paged_attn_kernel(table_ref, lens_ref,      # scalar prefetch
+                       q_ref,                    # (1, 1, R, D)
+                       k_ref, v_ref,             # (1, page_len, 1, D)
+                       o_ref,                    # (1, 1, 1, R, D) f32
+                       m_ref, l_ref,             # (1, 1, 1, R) f32
+                       m_s, l_s, acc_s,          # VMEM scratch
+                       *, page_len: int, bps: int):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0]                               # (R, D)
+    k = k_ref[0, :, 0, :]                         # (page_len, D)
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))    # (R, page_len)
+    base = (si * bps + j) * page_len
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, page_len), 1)
+    s = jnp.where(pos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_s[...]                             # (R, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # p is cast to the cache dtype before the PV product, mirroring the
+    # dense path's `p.astype(q.dtype)` — keeps kernel-vs-dense drift to
+    # the softmax reassociation alone
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_s[...] = acc_s[...] * corr + pv
+    m_s[...] = m_new
+
+    @pl.when(j == bps - 1)
+    def _flush():
+        o_ref[0, 0, 0] = acc_s[...]
+        m_ref[0, 0, 0] = m_s[..., 0]
+        l_ref[0, 0, 0] = l_s[..., 0]
+
+
+def paged_attention_kernel(qg: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, *, splits: int = 1,
+                           interpret: bool = False):
+    """qg (B, G, R, D) grouped decode queries; k/v pool (P, page_len, G,
+    D); page_table (B, NB) int32 with NB divisible by ``splits``; lengths
+    (B,) int32.  Returns partial ``(o, m, l)``: o (B, G, splits, R, D)
+    f32, m/l (B, G, splits, R) f32 — merge with
+    :func:`ops.merge_split_softmax`."""
+    b, g, r, d = qg.shape
+    page_len = k_pool.shape[1]
+    nb = page_table.shape[1]
+    assert nb % splits == 0, (nb, splits)
+    bps = nb // splits
+    grid = (b, g, splits, bps)
+
+    kern = functools.partial(_paged_attn_kernel, page_len=page_len, bps=bps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, r, d),
+                         lambda bi, gi, si, ji, tab, lens: (bi, gi, 0, 0)),
+            # the table walk: block index maps dereference the prefetched
+            # page table — page (tab[b, split*bps + j]) streams in, nothing
+            # else; the dense gather never happens
+            pl.BlockSpec((1, page_len, 1, d),
+                         lambda bi, gi, si, ji, tab, lens:
+                         (tab[bi, si * bps + ji], 0, gi, 0)),
+            pl.BlockSpec((1, page_len, 1, d),
+                         lambda bi, gi, si, ji, tab, lens:
+                         (tab[bi, si * bps + ji], 0, gi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, r, d),
+                         lambda bi, gi, si, ji, tab, lens:
+                         (bi, gi, si, 0, 0)),
+            pl.BlockSpec((1, 1, 1, r),
+                         lambda bi, gi, si, ji, tab, lens: (bi, gi, si, 0)),
+            pl.BlockSpec((1, 1, 1, r),
+                         lambda bi, gi, si, ji, tab, lens: (bi, gi, si, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((r, 1), jnp.float32),
+                        pltpu.VMEM((r, 1), jnp.float32),
+                        pltpu.VMEM((r, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, g, splits, r, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, g, splits, r), jnp.float32),
+                   jax.ShapeDtypeStruct((b, g, splits, r), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(page_table, lengths, qg, k_pool, v_pool)

@@ -1,0 +1,102 @@
+"""Public jit'd wrapper for the paged-attention decode kernel.
+
+Responsibilities: grouped-query reshape, split-KV table padding (trailing
+trash-page columns make the block count divisible by ``splits`` — padded
+blocks sit past every valid position, so they mask to exact zeros), the
+cross-split partial-softmax merge, the split-KV sharding hints, and the
+gather-traffic accounting benchmarks report (the paper-§IV "avoided
+accesses" image of the kernel, like ``bitplane_matmul.ops
+.plane_traffic_fraction`` for weight planes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.models.sharding import shard
+
+
+def merge_split_softmax(m: jnp.ndarray, l: jnp.ndarray, acc: jnp.ndarray,
+                        axis: int = -1) -> jnp.ndarray:
+    """Reduce per-split online-softmax partials into the full softmax.
+
+    ``m`` / ``l`` carry a split axis at ``axis``; ``acc`` carries the same
+    axis plus a trailing feature dim.  With the global max ``M`` over
+    splits, each split reweights by ``exp(m - M)`` — for a split that saw
+    no valid token ``m == NEG_INF`` (finite, -1e30) and the weight
+    underflows to exactly 0.0 in f32, so its junk partials are *bitwise*
+    absent from the sum.  A row with no valid token anywhere keeps
+    ``l_tot`` positive (every split contributes its uniform-junk ``l``),
+    so the output is finite garbage — never NaN — exactly like the dense
+    path's softmax over an all-NEG_INF row; such rows are inactive slots
+    whose outputs the serve tick discards.
+    """
+    axis = axis % m.ndim          # acc has a trailing extra dim, so resolve
+    m_max = jnp.max(m, axis=axis, keepdims=True)  # negative axes against m
+    w = jnp.exp(m - m_max)
+    l_tot = jnp.sum(l * w, axis=axis)
+    num = jnp.sum(acc * jnp.expand_dims(w, -1), axis=axis)
+    return num / jnp.maximum(l_tot, 1e-30)[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("splits", "interpret"))
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, *, splits: int = 1,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Decode attention straight off the page pool — no dense gather.
+
+    q (B, 1, H, D); k/v pool (P, page_len, G, D); page_table (B, NB)
+    int32 (entry 0 = trash page); lengths (B,) int32 valid tokens per row.
+    Returns (B, 1, H, D) in q's dtype — the drop-in replacement for
+    ``_paged_gather`` + ``_decode_attention`` (token-equal on every tested
+    seed/arch; logits agree to f32-ULP softmax reassociation, see
+    tests/test_paged_attention.py for the exact bar).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, _, h, d = q.shape
+    g = k_pool.shape[2]
+    nb = page_table.shape[1]
+    pad = (-nb) % splits
+    if pad:
+        # trash-page columns: their positions sit past any valid length,
+        # so the kernel masks them to exact zeros like any junk tail
+        page_table = jnp.pad(page_table, ((0, 0), (0, pad)))
+    qg = q.reshape(b, 1, g, h // g, d)[:, 0]             # (B, G, R, D)
+    o, m, l = paged_attention_kernel(qg, k_pool, v_pool,
+                                     page_table.astype(jnp.int32),
+                                     lengths.astype(jnp.int32),
+                                     splits=splits, interpret=interpret)
+    # split-KV partial-reduce rule: the split axis may ride the model mesh
+    # axis (models.sharding "kvsplit" kinds; launch.shardings
+    # .split_kv_specs documents the layout) — each shard owns a contiguous
+    # page run, the merge below is the only cross-shard reduction
+    o = shard(o, "kvsplit")
+    m = shard(m, "kvsplit_stat")
+    l = shard(l, "kvsplit_stat")
+    out = merge_split_softmax(m, l, o, axis=2)           # (B, G, R, D)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def gather_traffic_counts(page_table: np.ndarray, lengths: np.ndarray,
+                          page_len: int):
+    """(touched, total) page-read counts per decode tick, as floats.
+
+    ``total`` is what the dense ``pool[table]`` gather streams — every
+    allocated table column of every slot, valid or not; ``touched`` is
+    what the kernel's table walk reads — only pages holding at least one
+    valid token (``ceil(length / page_len)``).  The ratio is the paged
+    analogue of ``plane_traffic_fraction``: deterministic, exact, gated
+    by the ``paged_attn`` bench baseline.
+    """
+    table = np.asarray(page_table)
+    lens = np.asarray(lengths)
+    total = float(table.shape[0] * table.shape[1])
+    touched = float(np.sum(-(-lens // int(page_len))))
+    return touched, total

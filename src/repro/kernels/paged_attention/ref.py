@@ -1,0 +1,46 @@
+"""Dense-gather oracle for the paged-attention decode kernel.
+
+This is, op for op, the scheduler's historical dense path
+(``models.attention._paged_gather`` + ``_decode_attention``) specialized to
+decode: gather every page the table names into the padded logical view,
+run ONE masked einsum + monolithic softmax over it.  The kernel is tested
+against this — same inputs, same masking semantics — so "kernel vs ref"
+parity IS "kernel vs dense-gather scheduler" parity at the math level.
+
+Masking: decode queries sit at position ``lengths - 1`` and the dense path
+masks both causally (``kv_pos <= q_pos``) and by validity (``kv_pos <
+lengths``).  For decode the two are the same set — ``kv_pos <= lengths - 1``
+iff ``kv_pos < lengths`` — so the oracle (and the kernel) carry the single
+``kv_pos < lengths`` mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_reference(q: jnp.ndarray, k_pool: jnp.ndarray,
+                              v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                              lengths: jnp.ndarray) -> jnp.ndarray:
+    """q (B, 1, H, D); k/v pool (P, page_len, G, D); page_table (B, NB)
+    int32; lengths (B,) int32 valid tokens per row.  Returns (B, 1, H, D).
+    """
+    b, _, h, d = q.shape
+    page_len, g = k_pool.shape[1], k_pool.shape[2]
+    nb = page_table.shape[1]
+    kg = k_pool[page_table].reshape(b, nb * page_len, g, d)
+    vg = v_pool[page_table].reshape(b, nb * page_len, g, d)
+    qg = q.reshape(b, 1, g, h // g, d)[:, 0]             # (B, G, R, D)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg, kg,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    idx = jnp.arange(nb * page_len)
+    mask = idx[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrk,bkgd->bgrd", p.astype(q.dtype), vg,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

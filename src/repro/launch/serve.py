@@ -73,7 +73,7 @@ def _serve_continuous(cfg, params, args, mesh):
     quantum = 1
     if chunked != "off" or args.prefix_cache:
         quantum = chunk_len
-    if args.paged or args.prefix_cache:
+    if args.paged or args.prefix_cache or args.attn_kernel:
         quantum = math.lcm(quantum, args.page_len)
     if quantum > 1:
         pool = round_pool_len(pool, quantum)
@@ -81,8 +81,10 @@ def _serve_continuous(cfg, params, args, mesh):
         cfg, params, max_slots=args.max_slots, max_len=pool,
         buckets=buckets, quant=quant, with_stats=args.quant,
         tick_steps=args.tick_steps, chunked=chunked, chunk_len=chunk_len,
-        paged=args.paged or args.prefix_cache, page_len=args.page_len,
-        prefix_cache=args.prefix_cache,
+        paged=args.paged or args.prefix_cache or args.attn_kernel,
+        page_len=args.page_len,
+        prefix_cache=args.prefix_cache, attn_kernel=args.attn_kernel,
+        attn_splits=args.attn_splits,
         mesh=mesh if mesh is not None and mesh.size > 1 else None)
     rng = np.random.default_rng(args.seed)
     # with a prefix cache, draw a shared-system-prompt workload (half the
@@ -106,7 +108,9 @@ def _serve_continuous(cfg, params, args, mesh):
                  else f", chunked={chunked}/{sched.chunk_len}")
     if sched.paged:
         chunk_tag += (f", paged/{sched.page_len}"
-                      + ("+prefix" if sched.prefix_cache else ""))
+                      + ("+prefix" if sched.prefix_cache else "")
+                      + (f"+kernel/s{sched.attn_splits}"
+                         if sched.attn_kernel != "off" else ""))
     print(f"[serve] {cfg.name}: continuous batching ({mesh_tag}{chunk_tag}) "
           f"— {len(results)} requests, {sched.max_slots} slots, "
           f"tick={sched.tick_steps}: "
@@ -193,6 +197,16 @@ def main(argv=None):
                          "tables instead of owning dense cache slabs")
     ap.add_argument("--page-len", type=int, default=16,
                     help="tokens per KV page (paged mode)")
+    ap.add_argument("--attn-kernel", action="store_true",
+                    help="fused paged-attention decode kernel (implies "
+                         "--paged): walks the page tables directly instead "
+                         "of gathering pool[table] into the dense view "
+                         "(DESIGN.md §Paged attention kernel)")
+    ap.add_argument("--attn-splits", type=int, default=1,
+                    help="split-KV flash-decode: partition the KV page axis "
+                         "into this many independent softmax partials, "
+                         "merged at the end (rides the model mesh axis "
+                         "when it divides)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix prefix cache over the paged pool (implies "
                          "--paged): requests re-use the cached KV of their "

@@ -245,6 +245,39 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
         treedef, [one_path(p, l) for p, l in flat])
 
 
+def split_kv_specs(mesh: Mesh, *, splits: int, batch: int,
+                   model_axis: Optional[str] = "model",
+                   axes: Optional[tuple] = None) -> dict:
+    """Split-KV flash-decode partial-reduce rule (kernels/paged_attention).
+
+    The paged-attention kernel partitions the KV page axis into ``splits``
+    contiguous runs; each run emits partial online-softmax state — ``acc``
+    (B, G, split, R, D) plus the (m, l) statistics (B, G, split, R) — and
+    the cross-split merge (``ops.merge_split_softmax``) is the only
+    reduction that crosses runs.  Under a mesh the split axis rides the
+    model axis (each model shard owns its page run and reads nothing
+    else), the batch axis rides data like every per-slot tensor, and the
+    merge ships one (B, G, R)-sized triple per shard instead of
+    all-gathering cache pages.
+
+    Returns ``{"partial": P, "stat": P}`` — the jit-boundary image of the
+    ``models.sharding`` ``"kvsplit"`` / ``"kvsplit_stat"`` hint kinds
+    (same divisibility fallback: a non-divisible axis stays replicated).
+    """
+    from repro.launch.mesh import batch_axes
+    bax = tuple(axes) if axes is not None else batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in bax]))
+    msz = (mesh.shape[model_axis]
+           if model_axis and model_axis in mesh.axis_names else 1)
+    b_entry = (bax if len(bax) > 1 else bax[0]) \
+        if nb > 1 and batch % nb == 0 else None
+    s_entry = model_axis if msz > 1 and splits % msz == 0 else None
+    return {
+        "partial": P(b_entry, None, s_entry, None, None),
+        "stat": P(b_entry, None, s_entry, None),
+    }
+
+
 def serve_shardings(mesh: Mesh, params_tree: Any, caches_tree: Any, *,
                     batch: int,
                     model_axis: Optional[str] = "model",
@@ -278,6 +311,9 @@ def serve_shardings(mesh: Mesh, params_tree: Any, caches_tree: Any, *,
     ``paged=True`` (the paged slot pool, ISSUE 5): KV leaves are page
     pools sharded pages-on-data (see ``cache_shardings``); the host-built
     page table rides the ``tokens`` sharding — its rows follow the slots.
+    With the paged-attention kernel enabled (``attn_kernel=``, ISSUE 6)
+    the in-tick split-KV partials follow :func:`split_kv_specs` via the
+    ``models.sharding`` hint kinds — no extra jit-boundary entry needed.
     """
     from repro.launch.mesh import batch_axes
     bax = tuple(axes) if axes is not None else batch_axes(mesh)

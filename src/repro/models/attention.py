@@ -353,6 +353,10 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
         # length) and the chunked-prefill slab (chunk_valid real rows per
         # slot); the attention math is the same masked einsum as the dense
         # paths over the gathered view, so valid positions are bit-equal.
+        # With cfg.paged_attn_kernel != "off" the S=1 decode read skips the
+        # dense gather entirely: the Pallas kernel walks the page table
+        # (token-equal on every tested seed; logits to f32-ULP softmax
+        # reassociation — DESIGN.md §Paged attention kernel).
         pos = cache.length[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
         if chunk_valid is not None:
             keep = (jnp.arange(s, dtype=jnp.int32)[None]
@@ -366,14 +370,29 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
         kc = shard(kc, "pool")
         vc = shard(vc, "pool")
         new_len = cache.length + adv
-        kg = _paged_gather(kc, cache.page_table)
-        vg = _paged_gather(vc, cache.page_table)
-        kv_pos = jnp.broadcast_to(
-            jnp.arange(kg.shape[1], dtype=jnp.int32), (b, kg.shape[1]))
-        if s == 1:
+        if s == 1 and getattr(cfg, "paged_attn_kernel", "off") != "off":
+            # fused table-walk kernel: per-page K/V loads + online softmax
+            # straight off the pool — the dense gather below never runs.
+            # Decode masking is the single `pos < new_len` predicate (the
+            # causal mask is the same set at q_pos = new_len - 1); split-KV
+            # partials merge outside the kernel (kernels/paged_attention).
+            from repro.kernels.paged_attention.ops import \
+                paged_decode_attention
+            out = paged_decode_attention(
+                q, kc, vc, cache.page_table, new_len,
+                splits=getattr(cfg, "paged_attn_splits", 1))
+        elif s == 1:
+            kg = _paged_gather(kc, cache.page_table)
+            vg = _paged_gather(vc, cache.page_table)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(kg.shape[1], dtype=jnp.int32), (b, kg.shape[1]))
             out = _decode_attention(q, kg, vg, positions, kv_pos,
                                     kv_valid_len=new_len)
         else:
+            kg = _paged_gather(kc, cache.page_table)
+            vg = _paged_gather(vc, cache.page_table)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(kg.shape[1], dtype=jnp.int32), (b, kg.shape[1]))
             out = _chunk_attention(q, kg, vg, positions, kv_pos,
                                    kv_valid_len=new_len)
         new_cache = PagedKVCache(k=kc, v=vc, page_table=cache.page_table,

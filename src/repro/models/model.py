@@ -67,6 +67,12 @@ class ModelConfig:
     cache_dtype: Any = None           # None -> io dtype; f8 halves KV residency
     kv_chunk: int = 1024
     remat: str = "full"               # none | full | dots
+    # paged decode attention: "off" = dense pool[table] gather + masked
+    # einsum; "pallas" = the fused table-walk kernel
+    # (kernels/paged_attention) with paged_attn_splits-way split-KV
+    # flash-decode.  Only consulted on the PagedKVCache decode path.
+    paged_attn_kernel: str = "off"    # off | pallas
+    paged_attn_splits: int = 1
     # attention class: 'full' is quadratic -> long_500k is skipped for these
     # (DESIGN.md §Skips); SSM/hybrid run it.
     sub_quadratic: bool = False

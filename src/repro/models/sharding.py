@@ -53,6 +53,15 @@ _KIND_LAYOUT = {
     # its pages), and the in-page token dim is never sharded so (page,
     # offset) indexing needs no sharded-axis reshape
     "pool": ("b", None, None, None),
+    # split-KV flash-decode partials (kernels/paged_attention): acc
+    # (B, G, split, R, D) and the (m, l) statistics (B, G, split, R).  The
+    # split axis rides the model axis — each model shard owns a contiguous
+    # run of KV pages and its own partial softmax, and the cross-split
+    # merge (ops.merge_split_softmax) is the only collective: a tiny
+    # (B, G, R)-sized statistic reduce instead of an all-gathered cache
+    # (launch.shardings.split_kv_specs is the jit-boundary image)
+    "kvsplit": ("b", None, "m", None, None),
+    "kvsplit_stat": ("b", None, "m", None),
     # channels-REPLICATED (B, S, C): used with force=True to pin tensors
     # whose channel axis is about to be concat/split (the mamba conv window)
     "btc": ("b", None, None),

@@ -196,7 +196,12 @@ def make_slot_serve_step(cfg: ModelConfig, quant: QuantFlag = False,
     (``init_paged_pool``): KV reads gather the slot's pages, the
     new-token write scatters into its tail page, and everything else —
     length freezing, SSM-state masking — is identical to the dense path
-    (DESIGN.md §Paged KV + prefix cache).
+    (DESIGN.md §Paged KV + prefix cache).  When
+    ``cfg.paged_attn_kernel != "off"`` the decode read skips the dense
+    ``pool[table]`` gather entirely: attention dispatches to the fused
+    paged-attention kernel (``kernels/paged_attention``), which walks the
+    same ``page_table`` rows per block via scalar prefetch
+    (DESIGN.md §Paged attention kernel).
 
     The batch shape is the fixed slot pool, so *every* row computes each
     step; ``active`` masks the bookkeeping — an inactive slot's cache

@@ -91,6 +91,17 @@ class PagePool:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        if any(self.refcount[p] != 0 for p in pages):
+            # A page on the free list with a live reference means some
+            # holder's id would silently alias a new allocation — the
+            # device-side page tables (and the paged-attention kernel's
+            # table walk) have no staleness check, so fail loudly here
+            # rather than serve another request's KV.
+            bad = [p for p in pages if self.refcount[p] != 0]
+            raise RuntimeError(
+                f"PagePool.alloc: free-list pages {bad} still referenced "
+                f"(refcounts {[int(self.refcount[p]) for p in bad]}) — "
+                f"page ids must stay stable while referenced")
         self.refcount[pages] += 1
         return pages
 
@@ -312,10 +323,22 @@ class RadixCache:
     def evict(self, n_pages_needed: int) -> int:
         """Drop least-recently-used LEAF nodes (releasing their pool
         reference) until at least ``n_pages_needed`` pages are free or
-        the tree is empty.  A released page is only truly freed once no
-        live slot references it.  Returns the number of nodes dropped."""
+        nothing evictable remains.  A released page is only truly freed
+        once no live slot references it.  Returns the number of nodes
+        dropped.
+
+        Stops as soon as no resident node could free a page
+        (:meth:`evictable_pages` == 0): when every tree page is still
+        aliased by a live slot, continuing to drop nodes cannot satisfy
+        the request — it would only destroy prefix entries whose pages
+        come back to the tree-shareable state the moment those slots
+        retire.  (The scheduler guards its call with ``available +
+        evictable_pages() >= n``, but evict itself must not over-drain
+        on an unsatisfiable ask.)"""
         dropped = 0
         while self.pool.available < n_pages_needed:
+            if self.evictable_pages() == 0:
+                break
             leaves = [(parent, key, child)
                       for parent, key, child in self._iter_nodes()
                       if not child.children]

@@ -191,6 +191,16 @@ class ServeScheduler:
     adds radix-tree prefix reuse with ``min_prefix_hit`` (default
     ``page_len``) as the smallest hit worth taking and ``snapshot_limit``
     bounding the SSM-state snapshots hybrid models need per hit.
+
+    ``attn_kernel=True`` (or ``"pallas"``; requires ``paged``) routes the
+    decode read through the fused paged-attention kernel
+    (``kernels/paged_attention``): the kernel walks the page tables
+    directly instead of gathering ``pool[table]`` into the dense padded
+    view, and ``attn_splits`` partitions the KV page axis flash-decode
+    style (partial softmax statistics merged at the end).  Tokens are
+    equal to the dense-gather scheduler on every tested seed/arch
+    (asserted in tests/test_paged_attention.py); logits agree to f32-ULP
+    softmax reassociation — same bar as chunked-vs-bucketed prefill.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
@@ -210,7 +220,9 @@ class ServeScheduler:
                  n_pages: Optional[int] = None,
                  prefix_cache: bool = False,
                  snapshot_limit: int = 8,
-                 min_prefix_hit: Optional[int] = None):
+                 min_prefix_hit: Optional[int] = None,
+                 attn_kernel: bool | str = False,
+                 attn_splits: int = 1):
         if cfg.frontend != "none":
             raise ValueError("ServeScheduler serves token-id models only "
                              f"(frontend={cfg.frontend!r})")
@@ -280,6 +292,25 @@ class ServeScheduler:
             # legal: requests that can never fit it resolve through the
             # oversize policy at admission (reject/truncate/raise), so an
             # under-provisioned pool degrades per-request, never crashes
+        if isinstance(attn_kernel, bool):
+            attn_kernel = "pallas" if attn_kernel else "off"
+        if attn_kernel not in ("off", "pallas"):
+            raise ValueError(f"attn_kernel={attn_kernel!r}: expected 'off' "
+                             f"or 'pallas'")
+        attn_splits = int(attn_splits)
+        if attn_splits < 1:
+            raise ValueError(f"attn_splits={attn_splits} must be >= 1")
+        if attn_kernel != "off":
+            if not paged:
+                raise ValueError("attn_kernel requires paged=True (the "
+                                 "kernel walks the page tables)")
+            # the flag rides the config: every compiled program built below
+            # (tick / chunk / mixed) picks up the kernel dispatch through
+            # models.attention, with no engine-level plumbing
+            cfg = cfg.replace(paged_attn_kernel=attn_kernel,
+                              paged_attn_splits=attn_splits)
+        self.attn_kernel = attn_kernel
+        self.attn_splits = attn_splits
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots

@@ -175,6 +175,93 @@ class TestRadixCache:
                             max_hit=8, allow_partial=False) is not None
         assert pool.refcount[pages_b[0]] == 1
 
+    def test_unsatisfiable_evict_keeps_aliased_tree(self):
+        """Regression (ISSUE 6 "stable page ids while referenced"): when
+        every tree page is still aliased by a live slot, ``evict`` cannot
+        free anything — it must stop immediately instead of draining the
+        whole tree.  The old behaviour destroyed every prefix entry (the
+        pages would have become shareable again the moment the slots
+        retired) while freeing zero pages."""
+        pool = PagePool(8, 4)
+        cache = RadixCache(pool)
+        rng = np.random.default_rng(7)
+        a = _prompt(rng, 8)
+        pages = pool.alloc(2)                   # the live slot's pages
+        cache.insert(a, lambda i: pages[i])     # tree takes refs -> rc 2
+        # slot still running: do NOT release.  Nothing is evictable.
+        assert cache.evictable_pages() == 0
+        free_before = pool.available
+        assert cache.evict(pool.capacity) == 0  # unsatisfiable: no drops
+        assert pool.available == free_before
+        assert cache.n_pages == 2               # tree intact
+        # the slot retires -> pages become tree-only -> evict works again
+        pool.release(pages)
+        assert cache.evictable_pages() == 2
+        assert cache.evict(pool.capacity) == 2
+        assert cache.n_pages == 0
+
+    def test_evict_through_aliased_leaf_reaches_free_interior(self):
+        """Mixed aliasing: a freeable interior node behind a slot-aliased
+        leaf.  Evict may drop the aliased leaf (releasing only the tree's
+        reference — the live slot keeps the page and its id) to reach the
+        interior page it CAN free, and the slot's page is never handed to
+        a later alloc while the slot still holds it."""
+        pool = PagePool(8, 4)
+        cache = RadixCache(pool)
+        rng = np.random.default_rng(8)
+        a = _prompt(rng, 8)                     # blocks a0, a1
+        interior = pool.alloc(1)                # a0: tree-only after release
+        leaf = pool.alloc(1)                    # a1: aliased by a live slot
+        cache.insert(a, lambda i: (interior + leaf)[i])
+        pool.release(interior)                  # a0 rc=1 (tree only)
+        # `leaf` rc=2: tree + the live slot (not released)
+        assert cache.evictable_pages() == 1
+        freed_goal = pool.available + 1
+        dropped = cache.evict(freed_goal)
+        assert pool.available == freed_goal     # interior page came free
+        assert dropped == 2                     # aliased leaf + interior
+        assert pool.refcount[leaf[0]] == 1      # slot's ref intact
+        # exhaust the pool: the slot's page id must never be re-handed
+        grabbed = pool.alloc(pool.available)
+        assert leaf[0] not in grabbed
+        pool.release(leaf)                      # slot retires cleanly
+
+    def test_release_during_iteration_of_radix_edge(self):
+        """A slot releasing its pages while the tree still references them
+        (retire order: insert-then-release) must leave every edge valid:
+        lookups after the release return the same stable page ids, and
+        those ids are not on the free list."""
+        pool = PagePool(16, 4)
+        cache = RadixCache(pool)
+        rng = np.random.default_rng(9)
+        a = _prompt(rng, 12)
+        pages = self._seed(cache, pool, a)      # insert + release
+        hit = cache.lookup(np.concatenate([a, _prompt(rng, 1)]), max_hit=12,
+                           allow_partial=False)
+        assert hit is not None and hit.pages == pages
+        # none of the tree's pages leaked onto the free list
+        grabbed = pool.alloc(pool.available)
+        assert not (set(grabbed) & set(pages))
+
+    def test_alloc_refuses_referenced_free_list_page(self):
+        """Allocator invariant: a page must have refcount 0 when it leaves
+        the free list.  A corrupted free list (page freed while a holder
+        remains — e.g. a double-release bug upstream) raises instead of
+        silently aliasing one request's KV into another's page table."""
+        pool = PagePool(6, 4)
+        (page,) = pool.alloc(1)
+        pool._free.append(page)                 # simulate the corruption
+        with pytest.raises(RuntimeError, match="still referenced"):
+            pool.alloc(pool.available)
+        # a clean pool still allocates to exactly empty
+        pool2 = PagePool(6, 4)
+        held = pool2.alloc(2)
+        pool2.ref(held)                         # aliased refs held elsewhere
+        rest = pool2.alloc(pool2.available)     # alloc exactly at pool-empty
+        assert rest is not None and pool2.available == 0
+        assert pool2.alloc(1) is None
+        assert not (set(held) & set(rest))
+
     def test_snapshot_gating_and_lru_bound(self):
         pool = PagePool(64, 4)
         cache = RadixCache(pool, snapshot_limit=2)
