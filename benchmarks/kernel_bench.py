@@ -113,7 +113,7 @@ def paged_attn_gate_rows() -> dict:
     ref = paged_attention_reference(q, k, v, table, lens)
     outs, times = {}, {}
     for s in (1, 4):
-        times[s] = _time(lambda *a: paged_decode_attention(*a, splits=s),
+        times[s] = _time(lambda *a, s=s: paged_decode_attention(*a, splits=s),
                          q, k, v, table, lens, iters=3)
         outs[s] = paged_decode_attention(q, k, v, table, lens, splits=s)
     head = jnp.asarray(np.random.default_rng(9).standard_normal(

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core import log2_quantize
 from repro.models.paper_nets import PAPER_ACTIVATIONS
-from repro.simulator import (NAHID, NEUROCUBE, QEIHAN, PAPER_WORKLOADS,
+from repro.simulator import (NAHID, NEUROCUBE, PAPER_WORKLOADS, QEIHAN,
                              measure, paper_preset, simulate)
 
 Row = Tuple[str, float, float]

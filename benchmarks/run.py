@@ -85,19 +85,19 @@ def main() -> None:
             print(f"{name},{val:.4f},{ref_s}")
 
     if want("kernels"):
-        for key, fn in ALL_KERNEL_BENCHES.items():
+        for fn in ALL_KERNEL_BENCHES.values():
             for name, us, derived in fn():
                 d = "" if (isinstance(derived, float) and math.isnan(derived)) \
                     else f"{derived:.4g}"
                 print(f"kernels.{name},{us:.2f},{d}")
 
     if want("decode"):
-        for key, fn in ALL_DECODE_BENCHES.items():
+        for fn in ALL_DECODE_BENCHES.values():
             for name, val, _ in fn():
                 print(f"{name},{val:.4f},")
 
     if want("serve"):
-        for key, fn in ALL_SERVE_BENCHES.items():
+        for fn in ALL_SERVE_BENCHES.values():
             for name, val, _ in fn():
                 print(f"{name},{val:.4f},")
 

@@ -6,11 +6,19 @@ EXPERIMENTS.md §Paper.
   PYTHONPATH=src python examples/qeihan_analysis.py
 """
 
+import sys
+
 import numpy as np
 
-from benchmarks.paper_figures import (fig2_histograms, fig3_memory_savings,
-                                      fig9_memory_accesses, fig10_speedups,
-                                      fig11_energy)
+try:
+    import benchmarks  # noqa: F401  (repo root already on sys.path)
+except ImportError:  # `python examples/...` puts examples/ first, not the root
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.paper_figures import (fig10_speedups, fig11_energy,  # noqa: E402
+                                      fig2_histograms, fig3_memory_savings,
+                                      fig9_memory_accesses)
 
 
 def show(rows, title):

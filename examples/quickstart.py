@@ -13,11 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import get_smoke
 from repro.core import (log2_quantize, negative_fraction, pruned_fraction,
                         quantize_weights, shiftadd_matmul_bitplane,
                         shiftadd_matmul_exact, to_bitplanes,
                         weight_access_report)
-from repro.configs import get_smoke
 from repro.models import init_params
 from repro.models.quantize import quantize_model_params
 from repro.serving import greedy_generate

@@ -1,0 +1,17 @@
+"""Static program analysis: the serve-program auditor + shared HLO parsing.
+
+Sub-modules:
+
+* :mod:`repro.analysis.hlo` — HLO-text parsing shared by the roofline
+  (``launch.hlo_analysis`` re-exports it), the debug CLIs, and the budget
+  gate.
+* :mod:`repro.analysis.jaxpr_rules` / :mod:`~.sharding_rules` — trace-time
+  rules over serve-program jaxprs.
+* :mod:`repro.analysis.programs` — the audited variant matrix.
+* :mod:`repro.analysis.budgets` — per-program collective/traffic budgets.
+* :mod:`repro.analysis.recompile` — the compiled-program census sweep.
+* :mod:`repro.analysis.audit` — the driver (``tools/audit.py`` front-end).
+* :mod:`repro.analysis.report` — findings, waivers, the JSON report.
+"""
+
+from repro.analysis.report import AuditReport, Finding, Waiver  # noqa: F401

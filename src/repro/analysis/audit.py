@@ -1,0 +1,127 @@
+"""The audit driver: variants x programs x rule families -> AuditReport.
+
+``run_audit`` is what ``tools/audit.py`` (and the CI ``audit`` job) call.
+It never executes a serve program — rule families 1-2 run on jaxprs
+(trace only), family 3 on optimized HLO (compile only), and family 4
+(the recompile census) is the one deliberate exception: it drives a tiny
+scripted sweep because caching behavior is not a property of any single
+traced program (see ``analysis/recompile.py``).
+
+Rule applicability is part of the contract, not an optimization:
+
+* ``no-host-callback`` / ``no-double-precision`` — every program, every
+  variant (nothing in the serve path may sync the host or touch f64).
+* ``no-integer-upcast`` — quant variants only (the rule pins the
+  shift-add integer path; float programs have no integer path to widen).
+* ``no-dense-pool-gather`` — kernel variants, ``tick`` only.  The Pallas
+  kernel is a *decode* kernel: chunk ingestion (``chunk``/``mixed``)
+  reads the pool densely BY DESIGN for S>1 slabs, so flagging those
+  would just force a permanent waiver (DESIGN.md §Program audit).
+* ``sharded-rearrange`` — mesh variants, every program.
+* HLO budgets — mesh variants, per-tick programs (``tick``/``mixed``):
+  those run every serving tick, so their collective census IS the
+  steady-state interconnect bill.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis import budgets as budgets_mod
+from repro.analysis import jaxpr_rules, sharding_rules
+from repro.analysis.programs import (AUDIT_N_PAGES, Variant, audit_model,
+                                     build_scheduler, program_hlo,
+                                     variant_matrix)
+from repro.analysis.report import AuditReport, Finding
+
+RULES = ("no-host-callback", "no-double-precision", "no-integer-upcast",
+         "no-dense-pool-gather", "sharded-rearrange", "hlo-budget",
+         "recompile-census")
+
+BUDGET_PROGRAMS = ("tick", "mixed")
+
+
+def audit_variant(variant: Variant, report: AuditReport, *,
+                  cfg=None, params=None,
+                  with_budgets: bool = True,
+                  log=lambda msg: None) -> None:
+    """Trace/lower every program of one variant and run the static rules,
+    appending findings and budget records to ``report`` in place."""
+    sched = build_scheduler(variant, cfg=cfg, params=params)
+    programs = sched.audit_programs()
+    name = variant.name
+    for prog, (fn, args) in programs.items():
+        jaxpr = jaxpr_rules.make_program_jaxpr(fn, args)
+        fnd: List[Finding] = []
+        fnd += jaxpr_rules.rule_no_host_callback(jaxpr, name, prog)
+        fnd += jaxpr_rules.rule_no_double_precision(jaxpr, name, prog)
+        if variant.quant:
+            fnd += jaxpr_rules.rule_no_integer_upcast(jaxpr, name, prog)
+        if variant.attn_kernel and prog == "tick":
+            fnd += jaxpr_rules.rule_no_dense_pool_gather(
+                jaxpr, name, prog, n_pages=AUDIT_N_PAGES)
+        if variant.mesh_spec:
+            fnd += sharding_rules.rule_sharded_rearrange(jaxpr, name, prog)
+        report.findings.extend(fnd)
+        report.programs_audited += 1
+        if with_budgets and variant.mesh_spec and prog in BUDGET_PROGRAMS:
+            key = f"{name}/{prog}"
+            log(f"  lowering {key} for budgets...")
+            report.budgets[key] = budgets_mod.program_budget(
+                program_hlo(fn, args))
+    report.variants.append(name)
+
+
+def run_audit(mesh_specs: Optional[Sequence[Optional[str]]] = None, *,
+              baseline_path: str = budgets_mod.BASELINE_PATH,
+              update_baselines: bool = False,
+              with_budgets: bool = True,
+              with_recompile: bool = True,
+              log=lambda msg: None) -> AuditReport:
+    """Audit every variant the device count allows.
+
+    Mesh variants needing more devices than are visible are skipped with a
+    log line (the CI ``audit`` job forces 8 host devices so nothing skips
+    there); ``update_baselines=True`` rewrites the committed budget file
+    instead of gating against it.
+    """
+    import jax
+
+    report = AuditReport(rules_run=list(RULES))
+    n_dev = len(jax.devices())
+    if mesh_specs is None:
+        mesh_specs = (None, "2x2")
+    cfg, params = audit_model()
+    skipped = 0
+    for variant in variant_matrix(mesh_specs):
+        if variant.n_devices > n_dev:
+            log(f"SKIP {variant.name}: needs {variant.n_devices} devices, "
+                f"have {n_dev} (use --host-devices)")
+            skipped += 1
+            continue
+        log(f"auditing {variant.name}...")
+        audit_variant(variant, report, cfg=cfg, params=params,
+                      with_budgets=with_budgets, log=log)
+
+    if with_budgets and report.budgets:
+        if update_baselines:
+            budgets_mod.save_baseline(report.budgets, baseline_path)
+            log(f"wrote {len(report.budgets)} budgets -> {baseline_path}")
+        else:
+            baseline = budgets_mod.load_baseline(baseline_path)
+            if skipped:
+                # partial run (too few devices): gate only what was audited
+                # — do not flag baselines this run could not recompute
+                baseline = {k: v for k, v in baseline.items()
+                            if k in report.budgets}
+            report.findings.extend(budgets_mod.check_budgets(
+                report.budgets, baseline))
+
+    if with_recompile:
+        log("recompile audit (scripted sweep)...")
+        from repro.analysis.recompile import run_recompile_audit
+        fnd, census = run_recompile_audit()
+        report.findings.extend(fnd)
+        report.census = {k: int(v) for k, v in census.items()}
+
+    return report

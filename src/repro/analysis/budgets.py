@@ -1,0 +1,110 @@
+"""HLO budget gate (rule family 3): collective counts exact, bytes rtol.
+
+Sharded tick programs run every serving tick; an accidental extra
+all-gather per tick (a lost ``with_sharding_constraint``, a donation that
+stopped engaging, a new op XLA chose to rematerialize across the mesh) is
+invisible to the parity tests — the numbers stay right, the serve loop
+just quietly ships more bytes.  This gate pins, per sharded variant and
+program, the loop-scaled collective census (exact: counts are integers
+XLA chooses deterministically for a fixed program + mesh) and the
+roofline traffic estimate (rtol: byte totals wobble with fusion
+decisions across jaxlib point releases), against the committed baseline
+``benchmarks/baselines/program_audit.json``.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.analysis.hlo import analyze_hlo, collective_census
+from repro.analysis.report import Finding
+
+# traffic estimates ride XLA fusion choices; counts do not
+BYTES_RTOL = 0.10
+
+BASELINE_PATH = "benchmarks/baselines/program_audit.json"
+
+
+def program_budget(hlo: str) -> Dict:
+    """The budget record for one compiled program's optimized-HLO text."""
+    totals = analyze_hlo(hlo)
+    census = collective_census(hlo)
+    return {
+        "collectives": {k: int(v["count"])
+                        for k, v in sorted(census.items())},
+        "collective_bytes": {k: float(v["bytes"])
+                             for k, v in sorted(census.items())},
+        "traffic_bytes": float(totals["traffic_bytes"]),
+    }
+
+
+def load_baseline(path: str = BASELINE_PATH) -> Dict[str, Dict]:
+    with open(path) as f:
+        return json.load(f).get("programs", {})
+
+
+def save_baseline(budgets: Dict[str, Dict], path: str = BASELINE_PATH,
+                  note: Optional[str] = None) -> None:
+    doc = {
+        "note": note or ("per-program collective/traffic budgets — "
+                         "regenerate with tools/audit.py --update-baselines"),
+        "programs": {k: budgets[k] for k in sorted(budgets)},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def check_budgets(fresh: Dict[str, Dict], baseline: Dict[str, Dict], *,
+                  bytes_rtol: float = BYTES_RTOL) -> List[Finding]:
+    """Compare freshly-computed budgets against the committed baseline.
+
+    * collective COUNTS: exact — one extra all-gather launch is a bug.
+    * collective/traffic BYTES: relative tolerance ``bytes_rtol``.
+    * a program missing from the baseline (or vice versa) is itself a
+      finding: the baseline must be regenerated deliberately
+      (``--update-baselines``), never drift silently.
+    """
+    out: List[Finding] = []
+
+    def fi(key: str, detail: str) -> Finding:
+        variant, _, program = key.partition("/")
+        return Finding(rule="hlo-budget", variant=variant, program=program,
+                       detail=detail)
+
+    for key in sorted(set(fresh) | set(baseline)):
+        if key not in baseline:
+            out.append(fi(key, "program has no committed budget — run "
+                               "tools/audit.py --update-baselines"))
+            continue
+        if key not in fresh:
+            out.append(fi(key, "program in baseline but no longer audited "
+                               "— run tools/audit.py --update-baselines"))
+            continue
+        got, want = fresh[key], baseline[key]
+        gc, wc = got["collectives"], want["collectives"]
+        for kind in sorted(set(gc) | set(wc)):
+            g, w = int(gc.get(kind, 0)), int(wc.get(kind, 0))
+            if g != w:
+                out.append(fi(key, f"{kind} count {g} != budget {w} "
+                                   f"(exact gate: every launch is "
+                                   f"per-tick serving cost)"))
+        for field, gb in (("traffic_bytes", got["traffic_bytes"]),):
+            wb = float(want.get(field, 0.0))
+            if wb == 0.0 and gb == 0.0:
+                continue
+            rel = abs(gb - wb) / max(abs(wb), 1.0)
+            if rel > bytes_rtol:
+                out.append(fi(key, f"{field} {gb:.3e} vs budget {wb:.3e} "
+                                   f"(rel {rel:.1%} > {bytes_rtol:.0%})"))
+        gkb = got.get("collective_bytes", {})
+        wkb = want.get("collective_bytes", {})
+        for kind in sorted(set(gkb) | set(wkb)):
+            g, w = float(gkb.get(kind, 0.0)), float(wkb.get(kind, 0.0))
+            rel = abs(g - w) / max(abs(w), 1.0)
+            if rel > bytes_rtol:
+                out.append(fi(key, f"{kind} bytes {g:.3e} vs budget "
+                                   f"{w:.3e} (rel {rel:.1%} > "
+                                   f"{bytes_rtol:.0%})"))
+    return out

@@ -1,0 +1,389 @@
+"""Shared HLO-text parsing: computations, loop-scaled walks, analyses.
+
+One home for everything that reads ``compiled.as_text()`` — the roofline
+analysis (:func:`analyze_hlo`, historically ``launch/hlo_analysis.py``,
+which now re-exports from here), the debug CLIs (``tools/top_collectives``
+/ ``tools/top_traffic``), and the program auditor's HLO budget gate
+(``analysis/budgets.py``).
+
+Why text parsing at all: XLA's ``compiled.cost_analysis()`` counts a
+``while`` body **once**, but our models are ``lax.scan``-over-layers —
+everything interesting sits inside a while loop with a static trip count.
+Everything here re-derives its numbers from the HLO text with loop
+multipliers:
+
+* **FLOPs** — from ``dot``/``convolution`` ops: 2 * prod(result_dims) *
+  contracted_size (operand types resolved through a per-computation symbol
+  table; dots inside fusions included).
+* **Collective bytes / counts** — result bytes and loop-scaled instruction
+  counts of all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute, per kind (async pairs counted at the ``-done``).
+* **HBM traffic estimate** — 2x the result bytes of top-level (non-fused)
+  instructions: fusion boundaries are materialization points, and each
+  materialized buffer is written once and read ~once downstream.  Counting
+  results only (not operands) avoids double-counting shared inputs.
+
+Trip counts come from the ``known_trip_count`` backend_config XLA attaches
+to while ops (fallback: the comparison constant in the loop condition).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f4e2m1fn": 0.5, "token": 0, "opaque": 0,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w\.\-]+)\s*\(")
+OP_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+CONST_RE = re.compile(r"constant\((\d+)\)")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "copy-start", "copy-done", "after-all",
+                "partition-id", "replica-id", "iota"}
+
+
+def type_bytes(type_str: str) -> float:
+    """Total byte size of every array shape named in an HLO type string."""
+    total = 0.0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in [int(x) for x in dims.split(",") if x]:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def first_array_dims(type_str: str) -> List[int]:
+    m = SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)
+
+
+def split_computations(hlo: str) -> Dict[str, Computation]:
+    """Parse HLO text into named computations (``__entry__`` aliases the
+    ENTRY computation)."""
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        stripped = raw.strip()
+        if cur is None:
+            m = HEADER_RE.match(raw)
+            if m and raw.rstrip().endswith("{"):
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    comps["__entry__"] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        om = OP_RE.match(stripped)
+        if om:
+            ins = Instr(name=om.group(1), type_str=om.group(2).strip(),
+                        op=om.group(3), line=stripped)
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.type_str
+    return comps
+
+
+def operand_names(line: str) -> List[str]:
+    try:
+        start = line.index("(")
+    except ValueError:
+        return []
+    # stop at attribute section (", key=") to avoid called-computation refs
+    body = line[start:]
+    cut = re.search(r"\),\s*\w+=", body)
+    if cut:
+        body = body[: cut.start() + 1]
+    return OPERAND_RE.findall(body)
+
+
+def called_computations(line: str) -> List[str]:
+    out = []
+    for key in ("body", "condition", "calls", "to_apply",
+                "branch_computations"):
+        m = re.search(key + r"=\{?([^,}\s]+(?:,\s*[^,}\s]+)*)\}?", line)
+        if m:
+            for c in m.group(1).split(","):
+                c = c.strip().lstrip("%")
+                if c:
+                    out.append(c)
+    return out
+
+
+def trip_count(ins: Instr, comps: Dict[str, Computation]) -> Optional[int]:
+    """Static trip count of a ``while`` instruction, or None if unknown."""
+    m = TRIP_RE.search(ins.line)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+    if cm and cm.group(1) in comps:
+        consts = [int(c) for i in comps[cm.group(1)].instrs
+                  for c in CONST_RE.findall(i.line)]
+        consts = [c for c in consts if c > 0]
+        if consts:
+            return max(consts)
+    return None
+
+
+def collective_base(op: str) -> Optional[str]:
+    """Collective kind for an op name (``all-reduce-done`` ->
+    ``all-reduce``), or None for non-collectives."""
+    base = op
+    for suf in ("-start", "-done"):
+        if base.endswith(suf):
+            base = base[: -len(suf)]
+    return base if base in COLLECTIVES else None
+
+
+def scaled_instructions(comps: Dict[str, Computation],
+                        entry: Optional[str] = None,
+                        ) -> Iterator[Tuple[Instr, int]]:
+    """Yield ``(instr, multiplier)`` for every *top-level* instruction
+    reachable from the entry, loop-scaled: instructions inside a ``while``
+    body carry the loop's static trip count (nested loops multiply),
+    ``call`` / ``conditional`` / ``async-start`` bodies are walked at the
+    caller's multiplier.  Fusion interiors are NOT entered — a fusion is
+    one materialization point (the basis of both debug CLIs and the
+    collective census)."""
+    if entry is None:
+        ec = comps.get("__entry__")
+        if ec is None:
+            raise ValueError("no ENTRY computation found")
+        entry = ec.name
+
+    def walk(name: str, mult: int) -> Iterator[Tuple[Instr, int]]:
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                m = TRIP_RE.search(ins.line)
+                trips = int(m.group(1)) if m else 1
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if bm:
+                    yield from walk(bm.group(1), mult * trips)
+                continue
+            if ins.op in ("call", "conditional", "async-start"):
+                for key in ("calls", "to_apply", "branch_computations"):
+                    mm = re.search(key + r"=\{?([^,}\s]+)", ins.line)
+                    if mm:
+                        yield from walk(mm.group(1).strip().lstrip("%"),
+                                        mult)
+                continue
+            yield ins, mult
+
+    yield from walk(entry, 1)
+
+
+def collective_census(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Loop-scaled collective counts AND bytes per kind.
+
+    ``{"all-reduce": {"count": 12, "bytes": 1.5e6}, ...}`` — the count is
+    the number of collective *launches* the program performs end to end
+    (while bodies multiplied by their trip counts), the quantity the
+    program-audit budget gate pins exactly; bytes are the loop-scaled
+    result bytes (async pairs counted once, at the ``-done``)."""
+    out: Dict[str, Dict[str, float]] = {}
+    comps = split_computations(hlo)
+    for ins, mult in scaled_instructions(comps):
+        base = collective_base(ins.op)
+        if base is None or ins.op.endswith("-start"):
+            continue
+        d = out.setdefault(base, {"count": 0, "bytes": 0.0})
+        d["count"] += mult
+        d["bytes"] += type_bytes(ins.type_str) * mult
+    return out
+
+
+def dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
+    out_elems = 1.0
+    for d in first_array_dims(ins.type_str):
+        out_elems *= d
+    opnds = operand_names(ins.line)
+    if not opnds:
+        return 0.0
+    lhs_type = symbols.get(opnds[0], "")
+    lhs_dims = first_array_dims(lhs_type)
+    contract = 1.0
+    if ins.op == "dot":
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+        if m and m.group(1):
+            for ci in m.group(1).split(","):
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    contract *= lhs_dims[ci]
+    elif ins.op == "convolution":
+        # contracted size = kernel spatial x input features (approx: rhs
+        # elements / output features)
+        rhs_dims = (first_array_dims(symbols.get(opnds[1], ""))
+                    if len(opnds) > 1 else [])
+        out_dims = first_array_dims(ins.type_str)
+        if rhs_dims and out_dims:
+            contract = max(1.0, float(int(
+                __import__("numpy").prod(rhs_dims))) / max(out_dims[-1], 1))
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    unknown_trip_loops: int = 0
+
+    def scaled(self, k: float) -> "Totals":
+        t = Totals(flops=self.flops * k, traffic_bytes=self.traffic_bytes * k,
+                   unknown_trip_loops=self.unknown_trip_loops)
+        for kk, v in self.collective_bytes.items():
+            t.collective_bytes[kk] = v * k
+        return t
+
+    def add(self, o: "Totals"):
+        self.flops += o.flops
+        self.traffic_bytes += o.traffic_bytes
+        self.unknown_trip_loops += o.unknown_trip_loops
+        for k, v in o.collective_bytes.items():
+            self.collective_bytes[k] += v
+
+
+def _dus_update_bytes(comps, called_names) -> Optional[float]:
+    """If a fused computation performs an in-place buffer update (contains a
+    dynamic-update-slice whose buffer spans the fusion result, possibly
+    behind converts), return the update-operand bytes; else None."""
+    for c in called_names:
+        comp = comps.get(c)
+        if comp is None or not comp.instrs:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "dynamic-update-slice":
+                ops_ = operand_names(ins.line)
+                if len(ops_) > 1:
+                    ub = type_bytes(comp.symbols.get(ops_[1], ""))
+                    if ub:
+                        return ub
+    return None
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    """Loop-aware roofline inputs (flops / traffic / collective bytes) from
+    optimized-HLO text — see the module docstring for the model."""
+    comps = split_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[Tuple[str, bool], Totals] = {}
+
+    def walk(name: str, top_level: bool) -> Totals:
+        key = (name, top_level)
+        if key in memo:
+            return memo[key]
+        memo[key] = Totals()                                  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        t = Totals()
+        for ins in comp.instrs:
+            rb = type_bytes(ins.type_str)
+            if ins.op == "while":
+                trips = trip_count(ins, comps)
+                if trips is None:
+                    trips = 1
+                    t.unknown_trip_loops += 1
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if bm:
+                    t.add(walk(bm.group(1), True).scaled(trips))
+                continue
+            if ins.op in ("call", "conditional", "async-start"):
+                for c in called_computations(ins.line):
+                    t.add(walk(c, True))
+                continue
+            if ins.op == "fusion":
+                inner = Totals()
+                called = called_computations(ins.line)
+                for c in called:
+                    inner.add(walk(c, False))
+                t.flops += inner.flops
+                for k, v in inner.collective_bytes.items():
+                    t.collective_bytes[k] += v
+                if top_level:
+                    # in-place update fusions (root = dynamic-update-slice)
+                    # write only the update slice, not the whole buffer
+                    ub = _dus_update_bytes(comps, called)
+                    t.traffic_bytes += 2.0 * (ub if ub is not None else rb)
+                continue
+            if ins.op == "dynamic-update-slice":
+                if top_level:
+                    ops_ = operand_names(ins.line)
+                    ub = (type_bytes(comp.symbols.get(ops_[1], ""))
+                          if len(ops_) > 1 else rb)
+                    t.traffic_bytes += 2.0 * ub
+                continue
+
+            base = collective_base(ins.op)
+            if base is not None:
+                if not ins.op.endswith("-start"):
+                    t.collective_bytes[base] += rb
+                    if top_level:
+                        t.traffic_bytes += 2.0 * rb
+                continue
+            if ins.op in ("dot", "convolution"):
+                t.flops += dot_flops(ins, comp.symbols)
+            if ins.op in ("reduce", "reduce-window"):
+                # flops ~ input elements (one accumulate op per element)
+                for o in operand_names(ins.line)[:1]:
+                    ob = type_bytes(comp.symbols.get(o, ""))
+                    t.flops += ob / 4.0
+            if top_level and ins.op not in SKIP_TRAFFIC:
+                t.traffic_bytes += 2.0 * rb
+        memo[key] = t
+        return t
+
+    total = walk(entry.name, True)
+    # entry parameters (weights/caches) are materialized buffers no op
+    # produces — count one read of each (loop xs slicing reads each element
+    # once per step; FSDP re-gathers already appear as all-gather results)
+    param_bytes = sum(type_bytes(i.type_str) for i in entry.instrs
+                      if i.op == "parameter")
+    return {
+        "flops": total.flops,
+        "traffic_bytes": total.traffic_bytes + param_bytes,
+        "param_bytes": param_bytes,
+        "collective_bytes": dict(total.collective_bytes),
+        "collective_bytes_total": float(sum(total.collective_bytes.values())),
+        "unknown_trip_loops": total.unknown_trip_loops,
+    }

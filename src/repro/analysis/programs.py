@@ -1,0 +1,137 @@
+"""The audit variant matrix: every serve-program configuration we ship.
+
+One :class:`Variant` = (serving mode, numerics, mesh).  The four modes
+cover the scheduler's compiled-program surface end to end:
+
+* ``bucketed``  — monolithic bucketed prefill + fused decode tick (PR 1/2)
+* ``chunked``   — chunked prefill interleaved with decode (PR 4)
+* ``paged``     — paged KV pool + radix prefix cache (PR 5)
+* ``paged_kernel`` — ditto with the Pallas paged-attention kernel (PR 6)
+
+crossed with float vs quant (the shift-add integer path) and single-device
+vs a 2x2 data×model mesh.  Every variant builds a REAL ``ServeScheduler``
+on the smollm smoke config — the auditor then traces/lowers the exact
+programs the serve loop would dispatch (``ServeScheduler.audit_programs``)
+without executing any of them.
+
+Sizing notes: ``AUDIT_N_PAGES = 34`` is deliberately a value no other
+dimension of the smoke model takes, so :func:`jaxpr_rules.
+rule_no_dense_pool_gather` can identify the pool's page axis unambiguously
+(and 34 is even, so the pages-on-data sharding engages on a 2-way data
+axis).  The model is tiny; building all 16 variants takes seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+AUDIT_ARCH = "smollm-135m"
+AUDIT_BUCKETS: Tuple[int, ...] = (8, 16)
+AUDIT_MAX_LEN = 32
+AUDIT_SLOTS = 4
+AUDIT_TICK_STEPS = 2
+AUDIT_CHUNK_LEN = 8
+AUDIT_PAGE_LEN = 4
+AUDIT_N_PAGES = 34      # distinctive page-axis size — see module docstring
+
+MODES = ("bucketed", "chunked", "paged", "paged_kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    mode: str                      # one of MODES
+    quant: bool                    # shift-add integer path
+    mesh_spec: Optional[str]       # None (single device) or "DxM" e.g. "2x2"
+
+    @property
+    def name(self) -> str:
+        return (self.mode + ("-quant" if self.quant else "")
+                + (f"@{self.mesh_spec}" if self.mesh_spec else ""))
+
+    @property
+    def paged(self) -> bool:
+        return self.mode in ("paged", "paged_kernel")
+
+    @property
+    def attn_kernel(self) -> bool:
+        return self.mode == "paged_kernel"
+
+    @property
+    def n_devices(self) -> int:
+        if not self.mesh_spec:
+            return 1
+        d, m = self.mesh_spec.split("x")
+        return int(d) * int(m)
+
+
+def variant_matrix(mesh_specs: Sequence[Optional[str]] = (None, "2x2"),
+                   ) -> List[Variant]:
+    """The full registry, single-device variants first (cheapest to trace)."""
+    return [Variant(mode, quant, ms)
+            for ms in mesh_specs
+            for mode in MODES
+            for quant in (False, True)]
+
+
+def audit_model():
+    """(cfg, float params) for the audit scheduler — smoke smollm in f32
+    (bf16 smoke numerics are irrelevant to STRUCTURAL rules, and f32 keeps
+    the f64-upcast rule's negative space clean)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models.model import init_params
+
+    cfg = get_smoke(AUDIT_ARCH).replace(dtype=jnp.float32)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def build_scheduler(variant: Variant, cfg=None, params=None):
+    """A live ``ServeScheduler`` configured exactly as the variant says.
+
+    Pass ``cfg``/``params`` to reuse one smoke model across the matrix
+    (params are re-quantized per quant variant, never mutated)."""
+    from repro.models.quantize import quantize_model_params
+    from repro.serving.scheduler import ServeScheduler
+
+    if cfg is None or params is None:
+        cfg, params = audit_model()
+    if variant.quant:
+        params = quantize_model_params(cfg, params)
+    mesh = None
+    if variant.mesh_spec:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(variant.mesh_spec)
+    kw = dict(max_slots=AUDIT_SLOTS, max_len=AUDIT_MAX_LEN,
+              buckets=AUDIT_BUCKETS, quant=variant.quant,
+              tick_steps=AUDIT_TICK_STEPS, mesh=mesh)
+    if variant.mode == "chunked":
+        kw.update(chunked="always", chunk_len=AUDIT_CHUNK_LEN)
+    elif variant.paged:
+        kw.update(paged=True, page_len=AUDIT_PAGE_LEN,
+                  n_pages=AUDIT_N_PAGES, prefix_cache=True,
+                  chunked="auto", chunk_len=AUDIT_CHUNK_LEN,
+                  attn_kernel=variant.attn_kernel)
+    return ServeScheduler(cfg, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# trace / lower — never execute
+# ---------------------------------------------------------------------------
+
+
+def program_lowered(fn, args):
+    """``fn.lower(*args)`` under the program's own mesh context (sharded
+    wrappers expose ``lower``; plain jits have jax's)."""
+    lower = getattr(fn, "lower", None)
+    if lower is None:
+        raise TypeError(f"{fn!r} has no .lower — not a jitted program")
+    return lower(*args)
+
+
+def program_hlo(fn, args) -> str:
+    """Optimized HLO text of the compiled program (compile != execute:
+    nothing runs, XLA just emits the module the serve loop would launch)."""
+    return program_lowered(fn, args).compile().as_text()

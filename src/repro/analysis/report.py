@@ -1,0 +1,98 @@
+"""Audit findings, waivers, and the machine-readable report.
+
+A :class:`Finding` is one rule violation in one lowered program.  The
+auditor (``tools/audit.py``) collects findings from every rule family,
+applies the committed waiver file (``tools/audit_waivers.json``), and
+fails on whatever is left — a waiver is an explicit, reviewed decision
+with a reason string, never a silent default (DESIGN.md §Program audit).
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class Finding:
+    rule: str          # e.g. "no-dense-pool-gather"
+    variant: str       # e.g. "paged_kernel-quant@2x2"
+    program: str       # e.g. "tick"
+    detail: str        # human-readable evidence (primitive, shapes, dim)
+    waived: bool = False
+    waive_reason: Optional[str] = None
+
+    def key(self) -> str:
+        return f"{self.rule}:{self.variant}/{self.program}"
+
+
+@dataclass
+class Waiver:
+    """One committed exception: rule + variant/program glob + reason."""
+    rule: str
+    match: str         # fnmatch glob over "variant/program"
+    reason: str
+
+    def covers(self, f: Finding) -> bool:
+        return (self.rule == f.rule
+                and fnmatch.fnmatch(f"{f.variant}/{f.program}", self.match))
+
+
+def load_waivers(path: str) -> List[Waiver]:
+    """Read ``tools/audit_waivers.json``: ``{"waivers": [{"rule": ...,
+    "match": ..., "reason": ...}, ...]}``.  Entries without a non-empty
+    reason string are rejected — the reason IS the point."""
+    with open(path) as f:
+        data = json.load(f)
+    out = []
+    for w in data.get("waivers", []):
+        reason = w.get("reason", "")
+        if not isinstance(reason, str) or not reason.strip():
+            raise ValueError(f"waiver {w!r} has no reason string")
+        out.append(Waiver(rule=w["rule"], match=w["match"], reason=reason))
+    return out
+
+
+def apply_waivers(findings: List[Finding],
+                  waivers: List[Waiver]) -> List[Finding]:
+    """Mark waived findings in place; returns the still-failing rest."""
+    live = []
+    for f in findings:
+        for w in waivers:
+            if w.covers(f):
+                f.waived = True
+                f.waive_reason = w.reason
+                break
+        if not f.waived:
+            live.append(f)
+    return live
+
+
+@dataclass
+class AuditReport:
+    """Everything one ``tools/audit.py`` run produced, JSON-serializable
+    (CI uploads it as a workflow artifact next to the bench JSONs)."""
+    variants: List[str] = field(default_factory=list)
+    programs_audited: int = 0
+    rules_run: List[str] = field(default_factory=list)
+    findings: List[Finding] = field(default_factory=list)
+    budgets: Dict[str, dict] = field(default_factory=dict)
+    census: Dict[str, dict] = field(default_factory=dict)
+
+    @property
+    def failures(self) -> List[Finding]:
+        return [f for f in self.findings if not f.waived]
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": 1,
+            "variants": self.variants,
+            "programs_audited": self.programs_audited,
+            "rules_run": self.rules_run,
+            "findings": [asdict(f) for f in self.findings],
+            "budgets": self.budgets,
+            "census": self.census,
+            "n_failures": len(self.failures),
+        }, indent=2, sort_keys=True) + "\n"

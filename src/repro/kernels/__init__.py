@@ -9,8 +9,8 @@ Kernels target TPU v5e; on this CPU container they are validated with
 ``interpret=True`` (the wrappers auto-select based on backend).
 """
 
-from repro.kernels.log2quant.ops import log2_quantize_pallas
 from repro.kernels.bitplane_matmul.ops import bitplane_matmul_pallas
+from repro.kernels.log2quant.ops import log2_quantize_pallas
 from repro.kernels.paged_attention.ops import (merge_split_softmax,
                                                paged_decode_attention)
 

@@ -47,7 +47,7 @@ WEIGHT_BITS = 8
 
 # jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    getattr(pltpu, "TPUCompilerParams")
+    pltpu.TPUCompilerParams
 
 
 def _bitplane_matmul_kernel(min_plane_ref,          # scalar prefetch (Mb, Kb)

@@ -61,7 +61,7 @@ NEG_INF = -1e30
 
 # jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    getattr(pltpu, "TPUCompilerParams")
+    pltpu.TPUCompilerParams
 
 
 def _paged_attn_kernel(table_ref, lens_ref,      # scalar prefetch

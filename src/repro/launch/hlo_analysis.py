@@ -1,309 +1,43 @@
-"""Loop-aware HLO analysis for the roofline.
+"""Loop-aware HLO analysis for the roofline — compatibility shim.
 
-XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, but our
-models are ``lax.scan``-over-layers — everything interesting sits inside a
-while loop with a static trip count.  This module re-derives roofline inputs
-from ``compiled.as_text()`` with loop multipliers:
-
-* **FLOPs** — from ``dot``/``convolution`` ops: 2 * prod(result_dims) *
-  contracted_size (operand types resolved through a per-computation symbol
-  table; dots inside fusions included).
-* **Collective bytes** — result bytes of all-reduce / all-gather /
-  reduce-scatter / all-to-all / collective-permute, per kind (async pairs
-  counted at the ``-done``).
-* **HBM traffic estimate** — 2x the result bytes of top-level (non-fused)
-  instructions: fusion boundaries are materialization points, and each
-  materialized buffer is written once and read ~once downstream.  Counting
-  results only (not operands) avoids double-counting shared inputs.
-
-Trip counts come from the ``known_trip_count`` backend_config XLA attaches
-to while ops (fallback: the comparison constant in the loop condition).
+The implementation moved to :mod:`repro.analysis.hlo` (the program
+auditor, the debug CLIs, and the roofline all share one HLO-text parsing
+layer now); this module keeps the historical import path
+(``repro.launch.hlo_analysis.analyze_hlo``) and the old private-underscore
+names working.
 """
 
 from __future__ import annotations
 
-import re
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from repro.analysis.hlo import (
+    COLLECTIVES,
+    DTYPE_BYTES,
+    SKIP_TRAFFIC,
+    TRIP_RE,
+    Computation,
+    Instr,
+    Totals,
+    analyze_hlo,
+    collective_census,
+    dot_flops,
+    scaled_instructions,
+    split_computations,
+    trip_count,
+    type_bytes,
+)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-    "f4e2m1fn": 0.5, "token": 0, "opaque": 0,
-}
+# historical private names (pre-refactor callers imported these directly)
+_COLLECTIVES = COLLECTIVES
+_DTYPE_BYTES = DTYPE_BYTES
+_SKIP_TRAFFIC = SKIP_TRAFFIC
+_TRIP_RE = TRIP_RE
+_dot_flops = dot_flops
+_split_computations = split_computations
+_trip_count = trip_count
+_type_bytes = type_bytes
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w\.\-]+)\s*\(")
-_OP_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
-_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
-_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CONST_RE = re.compile(r"constant\((\d+)\)")
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-
-def _type_bytes(type_str: str) -> float:
-    total = 0.0
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1.0
-        for d in [int(x) for x in dims.split(",") if x]:
-            n *= d
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def _first_array_dims(type_str: str) -> List[int]:
-    m = _SHAPE_RE.search(type_str)
-    if not m:
-        return []
-    return [int(x) for x in m.group(2).split(",") if x]
-
-
-@dataclass
-class Instr:
-    name: str
-    type_str: str
-    op: str
-    line: str
-
-
-@dataclass
-class Computation:
-    name: str
-    is_entry: bool
-    instrs: List[Instr] = field(default_factory=list)
-    symbols: Dict[str, str] = field(default_factory=dict)
-
-
-def _split_computations(hlo: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    for raw in hlo.splitlines():
-        stripped = raw.strip()
-        if cur is None:
-            m = _HEADER_RE.match(raw)
-            if m and raw.rstrip().endswith("{"):
-                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
-                comps[cur.name] = cur
-                if cur.is_entry:
-                    comps["__entry__"] = cur
-            continue
-        if stripped.startswith("}"):
-            cur = None
-            continue
-        om = _OP_RE.match(stripped)
-        if om:
-            ins = Instr(name=om.group(1), type_str=om.group(2).strip(),
-                        op=om.group(3), line=stripped)
-            cur.instrs.append(ins)
-            cur.symbols[ins.name] = ins.type_str
-    return comps
-
-
-def _operand_names(line: str) -> List[str]:
-    try:
-        start = line.index("(")
-    except ValueError:
-        return []
-    # stop at attribute section (", key=") to avoid called-computation refs
-    body = line[start:]
-    cut = re.search(r"\),\s*\w+=", body)
-    if cut:
-        body = body[: cut.start() + 1]
-    return _OPERAND_RE.findall(body)
-
-
-def _called_computations(line: str) -> List[str]:
-    out = []
-    for key in ("body", "condition", "calls", "to_apply",
-                "branch_computations"):
-        m = re.search(key + r"=\{?([^,}\s]+(?:,\s*[^,}\s]+)*)\}?", line)
-        if m:
-            for c in m.group(1).split(","):
-                c = c.strip().lstrip("%")
-                if c:
-                    out.append(c)
-    return out
-
-
-def _dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
-    out_elems = 1.0
-    for d in _first_array_dims(ins.type_str):
-        out_elems *= d
-    opnds = _operand_names(ins.line)
-    if not opnds:
-        return 0.0
-    lhs_type = symbols.get(opnds[0], "")
-    lhs_dims = _first_array_dims(lhs_type)
-    contract = 1.0
-    if ins.op == "dot":
-        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
-        if m and m.group(1):
-            for ci in m.group(1).split(","):
-                ci = int(ci)
-                if ci < len(lhs_dims):
-                    contract *= lhs_dims[ci]
-    elif ins.op == "convolution":
-        # contracted size = kernel spatial x input features (approx: rhs
-        # elements / output features)
-        rhs_dims = _first_array_dims(symbols.get(opnds[1], "")) if len(opnds) > 1 else []
-        out_dims = _first_array_dims(ins.type_str)
-        if rhs_dims and out_dims:
-            contract = max(1.0, float(int(
-                __import__("numpy").prod(rhs_dims))) / max(out_dims[-1], 1))
-    return 2.0 * out_elems * contract
-
-
-@dataclass
-class Totals:
-    flops: float = 0.0
-    traffic_bytes: float = 0.0
-    collective_bytes: Dict[str, float] = field(
-        default_factory=lambda: defaultdict(float))
-    unknown_trip_loops: int = 0
-
-    def scaled(self, k: float) -> "Totals":
-        t = Totals(flops=self.flops * k, traffic_bytes=self.traffic_bytes * k,
-                   unknown_trip_loops=self.unknown_trip_loops)
-        for kk, v in self.collective_bytes.items():
-            t.collective_bytes[kk] = v * k
-        return t
-
-    def add(self, o: "Totals"):
-        self.flops += o.flops
-        self.traffic_bytes += o.traffic_bytes
-        self.unknown_trip_loops += o.unknown_trip_loops
-        for k, v in o.collective_bytes.items():
-            self.collective_bytes[k] += v
-
-
-def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> Optional[int]:
-    m = _TRIP_RE.search(ins.line)
-    if m:
-        return int(m.group(1))
-    cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
-    if cm and cm.group(1) in comps:
-        consts = [int(c) for i in comps[cm.group(1)].instrs
-                  for c in _CONST_RE.findall(i.line)]
-        consts = [c for c in consts if c > 0]
-        if consts:
-            return max(consts)
-    return None
-
-
-_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
-                 "bitcast", "copy-start", "copy-done", "after-all",
-                 "partition-id", "replica-id", "iota"}
-
-
-def _dus_update_bytes(comps, called_names) -> Optional[float]:
-    """If a fused computation performs an in-place buffer update (contains a
-    dynamic-update-slice whose buffer spans the fusion result, possibly
-    behind converts), return the update-operand bytes; else None."""
-    for c in called_names:
-        comp = comps.get(c)
-        if comp is None or not comp.instrs:
-            continue
-        for ins in comp.instrs:
-            if ins.op == "dynamic-update-slice":
-                ops_ = _operand_names(ins.line)
-                if len(ops_) > 1:
-                    ub = _type_bytes(comp.symbols.get(ops_[1], ""))
-                    if ub:
-                        return ub
-    return None
-
-
-def analyze_hlo(hlo: str) -> Dict[str, float]:
-    comps = _split_computations(hlo)
-    entry = comps.get("__entry__")
-    if entry is None:
-        raise ValueError("no ENTRY computation found")
-    memo: Dict[Tuple[str, bool], Totals] = {}
-
-    def walk(name: str, top_level: bool) -> Totals:
-        key = (name, top_level)
-        if key in memo:
-            return memo[key]
-        memo[key] = Totals()                                  # cycle guard
-        comp = comps.get(name)
-        if comp is None:
-            return memo[key]
-        t = Totals()
-        for ins in comp.instrs:
-            rb = _type_bytes(ins.type_str)
-            if ins.op == "while":
-                trips = _trip_count(ins, comps)
-                if trips is None:
-                    trips = 1
-                    t.unknown_trip_loops += 1
-                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
-                if bm:
-                    t.add(walk(bm.group(1), True).scaled(trips))
-                continue
-            if ins.op in ("call", "conditional", "async-start"):
-                for c in _called_computations(ins.line):
-                    t.add(walk(c, True))
-                continue
-            if ins.op == "fusion":
-                inner = Totals()
-                called = _called_computations(ins.line)
-                for c in called:
-                    inner.add(walk(c, False))
-                t.flops += inner.flops
-                for k, v in inner.collective_bytes.items():
-                    t.collective_bytes[k] += v
-                if top_level:
-                    # in-place update fusions (root = dynamic-update-slice)
-                    # write only the update slice, not the whole buffer
-                    ub = _dus_update_bytes(comps, called)
-                    t.traffic_bytes += 2.0 * (ub if ub is not None else rb)
-                continue
-            if ins.op == "dynamic-update-slice":
-                if top_level:
-                    ops_ = _operand_names(ins.line)
-                    ub = (_type_bytes(comp.symbols.get(ops_[1], ""))
-                          if len(ops_) > 1 else rb)
-                    t.traffic_bytes += 2.0 * ub
-                continue
-
-            base = ins.op
-            for suf in ("-start", "-done"):
-                if base.endswith(suf):
-                    base = base[: -len(suf)]
-            if base in _COLLECTIVES:
-                if not ins.op.endswith("-start"):
-                    t.collective_bytes[base] += rb
-                    if top_level:
-                        t.traffic_bytes += 2.0 * rb
-                continue
-            if ins.op in ("dot", "convolution"):
-                t.flops += _dot_flops(ins, comp.symbols)
-            if ins.op in ("reduce", "reduce-window"):
-                # flops ~ input elements (one accumulate op per element)
-                for o in _operand_names(ins.line)[:1]:
-                    ob = _type_bytes(comp.symbols.get(o, ""))
-                    t.flops += ob / 4.0
-            if top_level and ins.op not in _SKIP_TRAFFIC:
-                t.traffic_bytes += 2.0 * rb
-        memo[key] = t
-        return t
-
-    total = walk(entry.name, True)
-    # entry parameters (weights/caches) are materialized buffers no op
-    # produces — count one read of each (loop xs slicing reads each element
-    # once per step; FSDP re-gathers already appear as all-gather results)
-    param_bytes = sum(_type_bytes(i.type_str) for i in entry.instrs
-                      if i.op == "parameter")
-    return {
-        "flops": total.flops,
-        "traffic_bytes": total.traffic_bytes + param_bytes,
-        "param_bytes": param_bytes,
-        "collective_bytes": dict(total.collective_bytes),
-        "collective_bytes_total": float(sum(total.collective_bytes.values())),
-        "unknown_trip_loops": total.unknown_trip_loops,
-    }
+__all__ = [
+    "COLLECTIVES", "DTYPE_BYTES", "SKIP_TRAFFIC", "TRIP_RE", "Computation",
+    "Instr", "Totals", "analyze_hlo", "collective_census", "dot_flops",
+    "scaled_instructions", "split_computations", "trip_count", "type_bytes",
+]

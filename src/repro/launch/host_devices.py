@@ -38,7 +38,7 @@ def force_host_devices(argv, environ=os.environ):
             warnings.warn(
                 f"--host-devices {n} replaces the existing "
                 f"xla_force_host_platform_device_count={m.group(1)} "
-                f"in XLA_FLAGS")
+                f"in XLA_FLAGS", stacklevel=2)
         environ["XLA_FLAGS"] = _COUNT_RE.sub(flag, prev)
     else:
         environ["XLA_FLAGS"] = f"{prev} {flag}".strip()

@@ -38,7 +38,8 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     if model_parallel != 1 and n == 1:
         warnings.warn(f"make_host_mesh: only 1 device visible; falling back "
-                      f"to model_parallel=1 (requested {model_parallel})")
+                      f"to model_parallel=1 (requested {model_parallel})",
+                      stacklevel=2)
         model_parallel = 1
     if model_parallel < 1 or n % model_parallel != 0:
         raise ValueError(

@@ -200,7 +200,8 @@ def init_params(key, cfg: ModelConfig) -> Params:
     blocks = []
     for i, kind in enumerate(cfg.pattern):
         layer_keys = jax.random.split(keys[i], cfg.repeats)
-        blocks.append(jax.vmap(lambda k: _init_block(k, cfg, kind))(layer_keys))
+        blocks.append(jax.vmap(
+            lambda k, kind=kind: _init_block(k, cfg, kind))(layer_keys))
     params: Params = {
         "embed": embed_init(keys[-3], cfg.vocab_size, cfg.d_model, cfg.dtype),
         "blocks": tuple(blocks),

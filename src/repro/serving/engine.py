@@ -36,6 +36,7 @@ serving).
 from __future__ import annotations
 
 import collections
+import contextlib
 from typing import Any, Optional, Tuple, Union
 
 import jax
@@ -85,14 +86,37 @@ def jit_sharded(fn, mesh=None, *, in_shardings=None, out_shardings=None,
     from repro.launch.mesh import batch_axes
     from repro.models.sharding import mesh_axes
 
-    def call(*args, **kwargs):
+    @contextlib.contextmanager
+    def trace_context():
+        """The binding every call runs under — exposed so the program
+        auditor (``repro.analysis``) can trace/lower the SAME program the
+        serve loop executes, without executing it."""
         with mesh, mesh_axes(batch=batch_axes(mesh), model="model",
                              seq_shard=False, sizes=dict(mesh.shape),
                              mesh=mesh):
+            yield
+
+    def call(*args, **kwargs):
+        with trace_context():
             return jitted(*args, **kwargs)
 
+    def lower(*args, **kwargs):
+        with trace_context():
+            return jitted.lower(*args, **kwargs)
+
     call.jitted = jitted
+    call.trace_context = trace_context
+    call.lower = lower
     return call
+
+
+def compiled_size(fn) -> int:
+    """Compiled-program count of a ``jax.jit`` fn or ``jit_sharded``
+    wrapper.  ``_cache_size`` is a private jax API (present on the pinned
+    jax 0.4.37); report -1 if a future jax drops it rather than crash."""
+    fn = getattr(fn, "jitted", fn)
+    probe = getattr(fn, "_cache_size", None)
+    return int(probe()) if callable(probe) else -1
 
 
 def _maybe_shard(fn, mesh, in_shardings, out_shardings):

@@ -73,6 +73,7 @@ same masked decode attention, same greedy sampling.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -708,15 +709,9 @@ class ServeScheduler:
         return len(self._queue) + int(self._active.sum())
 
     def compile_stats(self) -> Dict[str, int]:
-        """Compiled-program counts — the bucket bound made observable.
-
-        ``_cache_size`` is a private jax API (present on the pinned
-        jax 0.4.37); report -1 per program if a future jax drops it rather
-        than crash the serve loop."""
-        def size(fn) -> int:
-            fn = getattr(fn, "jitted", fn)       # unwrap jit_sharded
-            probe = getattr(fn, "_cache_size", None)
-            return int(probe()) if callable(probe) else -1
+        """Compiled-program counts — the bucket bound made observable
+        (see :func:`engine.compiled_size` for the probe caveat)."""
+        size = engine.compiled_size
         stats = {"prefill": size(self._prefill),
                  "tick": size(self._tick),
                  "write_slot": size(self._write)}
@@ -725,6 +720,65 @@ class ServeScheduler:
             stats["chunk"] = size(self._chunk)
             stats["mixed"] = size(self._mixed)
         return stats
+
+    def audit_programs(self) -> "collections.OrderedDict":
+        """Every compiled program this scheduler dispatches, as
+        ``{name: (fn, example_args)}`` with args matching the live call
+        sites exactly (``jax.ShapeDtypeStruct`` stands in for the real
+        operands).  Consumed by the static program auditor
+        (``repro.analysis``), which traces/lowers these WITHOUT executing
+        anything — keep this in sync with the ``step_tick`` / ``_admit*``
+        dispatch sites above."""
+        cfg = self.cfg
+        i32, b1 = jnp.int32, jnp.bool_
+        sds = jax.ShapeDtypeStruct
+
+        def abstract(tree):
+            return jax.tree.map(
+                lambda a: sds(jnp.shape(a), jnp.result_type(a)), tree)
+
+        params = abstract(self.params)
+        pool = abstract(self._pool)
+        B, V = self.max_slots, cfg.vocab_size
+        logits = sds((B, V), cfg.dtype)
+        active = sds((B,), b1)
+        pt = ((sds((B, self.max_blocks), i32),) if self.paged else ())
+
+        out: "collections.OrderedDict" = collections.OrderedDict()
+        for b in self.buckets:
+            out[f"prefill_b{b}"] = (
+                self._prefill, (params, sds((1, b), i32), sds((1,), i32)))
+        # the batch-1 slot cache _write scatters is prefill's second output
+        # (NOT init_caches' shape: slot_prefill rewrites `length` to the
+        # (1,)-shaped true_len) — eval_shape the real program
+        ctx = getattr(self._prefill, "trace_context", None)
+        target = getattr(self._prefill, "jitted", self._prefill)
+        with (ctx() if ctx is not None else contextlib.nullcontext()):
+            _, cache1 = jax.eval_shape(
+                target, params, sds((1, self.buckets[0]), i32),
+                sds((1,), i32))
+        cache1 = abstract(cache1)
+        write_args = (pool, cache1, logits, sds((1, V), cfg.dtype),
+                      sds((), i32))
+        if self.paged:
+            write_args += (sds((self.max_blocks,), i32), sds((), i32))
+        out["write"] = (self._write, write_args)
+        out["tick"] = (self._tick, (params, pool, logits, active) + pt)
+        if self._needs_chunk_programs:
+            tokens = sds((B, self.chunk_len), i32)
+            flags = (sds((B,), i32), active, active)   # valid, fresh, finish
+            out["chunk"] = (self._chunk,
+                            (params, pool, logits, tokens) + flags + pt)
+            out["mixed"] = (self._mixed,
+                            (params, pool, logits, active, tokens)
+                            + flags + pt)
+        if self.paged:
+            out["cow"] = (self._cow, (pool, sds((), i32), sds((), i32)))
+            out["admit_hit"] = (self._admit_hit_plain,
+                                (pool, sds((), i32), sds((), i32)))
+            if self._has_ssm:
+                out["snap"] = (self._snap, (pool, sds((), i32)))
+        return out
 
     def prefix_cache_stats(self) -> Dict[str, float]:
         """Prefix-cache effectiveness over everything admitted so far:

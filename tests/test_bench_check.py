@@ -1,0 +1,120 @@
+"""Tests for tools/bench_check.py — the bench-drift gate CI relies on.
+
+Covers the tolerance-class contract: exact metrics fail on any change,
+tight metrics respect the 2% rtol, advisory metrics never fail, and
+``--update`` rewrites the baselines from the fresh run."""
+
+import importlib.util
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_check", os.path.join(REPO, "tools", "bench_check.py"))
+bench_check = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_check)
+
+
+def _write_fresh(tmp_path, rows, bench="demo", name="fresh.txt"):
+    p = tmp_path / name
+    p.write_text("# json " + json.dumps({"bench": bench, "rows": rows})
+                 + "\n")
+    return str(p)
+
+
+def _write_baseline(tmp_path, rows, bench="demo"):
+    d = tmp_path / "baselines"
+    d.mkdir(exist_ok=True)
+    (d / f"{bench}.json").write_text(
+        json.dumps({"bench": bench, "rows": rows}))
+    return str(d)
+
+
+def _run(tmp_path, base_rows, fresh_rows, extra=()):
+    base_dir = _write_baseline(tmp_path, base_rows)
+    fresh = _write_fresh(tmp_path, fresh_rows)
+    return bench_check.main([fresh, "--baseline-dir", base_dir, *extra])
+
+
+class TestToleranceClasses:
+    def test_identical_rows_pass(self, tmp_path):
+        rows = {"smoke.bit_equal": 1.0, "decode.tok_s": 42.0}
+        assert _run(tmp_path, rows, rows) == 0
+
+    def test_exact_metric_mismatch_fails(self, tmp_path):
+        assert _run(tmp_path, {"smoke.bit_equal": 1.0},
+                    {"smoke.bit_equal": 0.0}) == 1
+
+    def test_tight_within_rtol_passes(self, tmp_path):
+        # 1% drift < 2% rtol
+        assert _run(tmp_path, {"q.plane_traffic_fraction": 0.500},
+                    {"q.plane_traffic_fraction": 0.505}) == 0
+
+    def test_tight_outside_rtol_fails(self, tmp_path):
+        # 4% drift > 2% rtol
+        assert _run(tmp_path, {"q.plane_traffic_fraction": 0.500},
+                    {"q.plane_traffic_fraction": 0.520}) == 1
+
+    def test_advisory_never_fails(self, tmp_path):
+        # a 10x throughput collapse warns but does not gate
+        assert _run(tmp_path, {"decode.tok_s": 100.0},
+                    {"decode.tok_s": 10.0}) == 0
+
+    def test_missing_row_fails(self, tmp_path):
+        assert _run(tmp_path, {"smoke.bit_equal": 1.0, "decode.tok_s": 1.0},
+                    {"decode.tok_s": 1.0}) == 1
+
+    def test_new_row_only_warns(self, tmp_path):
+        assert _run(tmp_path, {"decode.tok_s": 1.0},
+                    {"decode.tok_s": 1.0, "extra.tok_s": 2.0}) == 0
+
+    def test_nan_ness_change_fails(self, tmp_path):
+        assert _run(tmp_path, {"smoke.hit_rate": None},
+                    {"smoke.hit_rate": 0.5}) == 1
+
+
+class TestStructural:
+    def test_missing_bench_pass_fails(self, tmp_path):
+        base_dir = _write_baseline(tmp_path, {"a.bit_equal": 1.0},
+                                   bench="gone")
+        fresh = _write_fresh(tmp_path, {"b.tok_s": 1.0}, bench="other")
+        assert bench_check.main([fresh, "--baseline-dir", base_dir]) == 1
+
+    def test_no_json_lines_is_operational_error(self, tmp_path):
+        p = tmp_path / "empty.txt"
+        p.write_text("no summaries here\n")
+        assert bench_check.main([str(p)]) == 2
+
+    def test_non_bench_baseline_json_ignored(self, tmp_path):
+        # program_audit.json (the auditor's budget file) shares the
+        # baselines directory but has no "rows" — bench_check must skip it
+        rows = {"decode.tok_s": 1.0}
+        base_dir = _write_baseline(tmp_path, rows)
+        with open(os.path.join(base_dir, "program_audit.json"), "w") as f:
+            json.dump({"programs": {"v/tick": {"collectives": {}}}}, f)
+        fresh = _write_fresh(tmp_path, rows)
+        assert bench_check.main([fresh, "--baseline-dir", base_dir]) == 0
+
+
+class TestUpdate:
+    def test_update_rewrites_baselines(self, tmp_path):
+        base_dir = str(tmp_path / "baselines")
+        fresh = _write_fresh(tmp_path, {"smoke.bit_equal": 1.0,
+                                        "decode.tok_s": 3.5})
+        assert bench_check.main([fresh, "--baseline-dir", base_dir,
+                                 "--update"]) == 0
+        with open(os.path.join(base_dir, "demo.json")) as f:
+            doc = json.load(f)
+        assert doc["rows"] == {"smoke.bit_equal": 1.0, "decode.tok_s": 3.5}
+        # and the rewritten baseline gates clean against the same fresh run
+        assert bench_check.main([fresh, "--baseline-dir", base_dir]) == 0
+
+    def test_update_then_drift_fails(self, tmp_path):
+        base_dir = str(tmp_path / "baselines")
+        fresh = _write_fresh(tmp_path, {"smoke.bit_equal": 1.0})
+        assert bench_check.main([fresh, "--baseline-dir", base_dir,
+                                 "--update"]) == 0
+        drifted = _write_fresh(tmp_path, {"smoke.bit_equal": 0.0},
+                               name="drift.txt")
+        assert bench_check.main([drifted, "--baseline-dir", base_dir]) == 1

@@ -40,7 +40,7 @@ def _seeded_float_batches(n_batches=20, max_size=64):
     magnitudes (1e-6..1e3), zeros and sign flips, seeded."""
     rng = np.random.default_rng(1234)
     out = []
-    for i in range(n_batches):
+    for _ in range(n_batches):
         size = int(rng.integers(1, max_size + 1))
         mag = rng.choice([1e-6, 1e-3, 0.1, 1.0, 30.0, 1e3], size)
         x = (rng.normal(0, 1.0, size) * mag).astype(np.float32)

@@ -1,0 +1,147 @@
+"""Static program auditor CLI — trace/lower every serve program, run the
+rule families, gate on committed budgets and waivers.
+
+Usage (CI runs exactly this):
+
+    PYTHONPATH=src python tools/audit.py --host-devices 8 \\
+        --report audit_report.json
+
+    # after a deliberate sharding/collective change:
+    PYTHONPATH=src python tools/audit.py --host-devices 8 \\
+        --update-baselines
+
+Exit codes: 0 clean (waived findings allowed), 1 unwaived findings,
+2 operational error.  ``--host-devices`` must come before the first jax
+import, which is why this file imports jax lazily.
+"""
+
+import argparse
+import sys
+
+try:
+    import repro  # noqa: F401  (PYTHONPATH=src already set)
+except ImportError:  # bare checkout: resolve src/ relative to this file
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.host_devices import force_host_devices  # noqa: E402
+
+WAIVERS_PATH = "tools/audit_waivers.json"
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    force_host_devices(argv)  # BEFORE any jax import
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--host-devices",
+        type=int,
+        default=None,
+        help="force N XLA host devices (needed for the mesh variants; "
+        "8 covers the 2x2 matrix)",
+    )
+    ap.add_argument(
+        "--mesh",
+        default="2x2",
+        help="mesh specs to audit, comma-separated ('' for single-device "
+        "only; default: 2x2)",
+    )
+    ap.add_argument(
+        "--report",
+        default=None,
+        metavar="PATH",
+        help="write the machine-readable JSON report here",
+    )
+    ap.add_argument(
+        "--baselines",
+        default=None,
+        metavar="PATH",
+        help="budget baseline file (default: "
+        "benchmarks/baselines/program_audit.json)",
+    )
+    ap.add_argument(
+        "--update-baselines",
+        action="store_true",
+        help="rewrite the budget baselines from this run instead of "
+        "gating against them",
+    )
+    ap.add_argument(
+        "--waivers",
+        default=WAIVERS_PATH,
+        metavar="PATH",
+        help=f"waiver file (default: {WAIVERS_PATH})",
+    )
+    ap.add_argument(
+        "--no-budgets",
+        action="store_true",
+        help="skip the HLO budget gate (rule family 3)",
+    )
+    ap.add_argument(
+        "--no-recompile",
+        action="store_true",
+        help="skip the recompile census sweep (rule family 4)",
+    )
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import budgets as budgets_mod
+    from repro.analysis.audit import run_audit
+    from repro.analysis.report import apply_waivers, load_waivers
+
+    def log(msg):
+        if not args.quiet:
+            print(msg, flush=True)
+
+    mesh_specs = [None] + [m for m in args.mesh.split(",") if m]
+
+    try:
+        waivers = load_waivers(args.waivers)
+    except FileNotFoundError:
+        waivers = []
+    except ValueError as e:
+        print(f"audit: bad waiver file: {e}", file=sys.stderr)
+        return 2
+
+    try:
+        report = run_audit(
+            mesh_specs,
+            baseline_path=args.baselines or budgets_mod.BASELINE_PATH,
+            update_baselines=args.update_baselines,
+            with_budgets=not args.no_budgets,
+            with_recompile=not args.no_recompile,
+            log=log,
+        )
+    except FileNotFoundError as e:
+        print(
+            f"audit: missing baseline ({e}) — run with --update-baselines first",
+            file=sys.stderr,
+        )
+        return 2
+
+    live = apply_waivers(report.findings, waivers)
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(report.to_json())
+        log(f"report -> {args.report}")
+
+    n_waived = sum(1 for f in report.findings if f.waived)
+    print(
+        f"audit: {len(report.variants)} variants, "
+        f"{report.programs_audited} programs, "
+        f"{len(report.budgets)} budgets checked, "
+        f"{len(report.findings)} findings "
+        f"({n_waived} waived, {len(live)} failing)"
+    )
+    for f in report.findings:
+        if f.waived:
+            print(f"  WAIVED {f.key()}: {f.detail}")
+            print(f"         reason: {f.waive_reason}")
+    for f in live:
+        print(f"  FAIL {f.key()}: {f.detail}")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -160,14 +160,18 @@ def main(argv=None):
         return 0
 
     failures, warnings = [], []
-    baselines = {
-        fn[: -len(".json")]: os.path.join(args.baseline_dir, fn)
-        for fn in sorted(os.listdir(args.baseline_dir))
-        if fn.endswith(".json")
-    }
-    for bench, path in baselines.items():
-        with open(path) as f:
-            base = json.load(f)
+    baselines = {}
+    for fn in sorted(os.listdir(args.baseline_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(args.baseline_dir, fn)) as f:
+            doc = json.load(f)
+        if "rows" not in doc:
+            # not a bench baseline — e.g. program_audit.json, the program
+            # auditor's budget file (gated by tools/audit.py, not here)
+            continue
+        baselines[fn[: -len(".json")]] = doc
+    for bench, base in baselines.items():
         if bench not in fresh:
             failures.append(
                 f"{bench}: baseline exists but the fresh run produced no "

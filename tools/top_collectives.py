@@ -1,60 +1,36 @@
-"""Debug: top collective ops in a saved HLO (loop-scaled)."""
+"""Debug: top collective ops in a saved HLO (loop-scaled).
 
-import re
+Usage: python tools/top_collectives.py dump.hlo.txt
+"""
+
 import sys
 
-sys.path.insert(0, "src")
-from repro.launch.hlo_analysis import (  # noqa: E402 (needs sys.path)
-    _TRIP_RE,
-    _split_computations,
-    _type_bytes,
-)
+try:
+    import repro  # noqa: F401  (PYTHONPATH=src already set)
+except ImportError:  # bare checkout: resolve src/ relative to this file
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-_COLLECTIVES = (
-    "all-reduce",
-    "all-gather",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
+from repro.analysis.hlo import (
+    collective_base,
+    scaled_instructions,
+    split_computations,
+    type_bytes,
 )
 
 
 def top(path, k=20):
     hlo = open(path).read()
-    comps = _split_computations(hlo)
-    entry = comps["__entry__"]
     items = []
-
-    def walk(name, mult):
-        comp = comps.get(name)
-        if comp is None:
-            return
-        for ins in comp.instrs:
-            if ins.op == "while":
-                m = _TRIP_RE.search(ins.line)
-                trips = int(m.group(1)) if m else 1
-                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
-                if bm:
-                    walk(bm.group(1), mult * trips)
-                continue
-            if ins.op in ("call", "conditional", "async-start"):
-                for key in ("calls", "to_apply", "branch_computations"):
-                    mm = re.search(key + r"=\{?([^,}\s]+)", ins.line)
-                    if mm:
-                        walk(mm.group(1).strip().lstrip("%"), mult)
-                continue
-            base = ins.op
-            for suf in ("-start", "-done"):
-                if base.endswith(suf):
-                    base = base[: -len(suf)]
-            if base in _COLLECTIVES and not ins.op.endswith("-start"):
-                rb = _type_bytes(ins.type_str) * mult
-                items.append((rb, base, ins.type_str[:70], mult))
-
-    walk(entry.name, 1)
+    for ins, mult in scaled_instructions(split_computations(hlo)):
+        base = collective_base(ins.op)
+        if base is not None and not ins.op.endswith("-start"):
+            rb = type_bytes(ins.type_str) * mult
+            items.append((rb, base, ins.type_str[:70], mult))
     items.sort(reverse=True)
     for rb, op, t, mult in items[:k]:
         print(f"{rb / 2**30:9.2f} GiB  x{mult:<5} {op:<20} {t}")
 
 
-top(sys.argv[1])
+if __name__ == "__main__":
+    top(sys.argv[1])

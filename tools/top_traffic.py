@@ -1,53 +1,38 @@
-"""Debug: top traffic-contributing top-level ops in a saved HLO (loop-scaled)."""
+"""Debug: top traffic-contributing top-level ops in a saved HLO (loop-scaled).
 
-import re
+Usage: python tools/top_traffic.py dump.hlo.txt
+"""
+
 import sys
 
-sys.path.insert(0, "src")
-from repro.launch.hlo_analysis import (  # noqa: E402 (needs sys.path)
-    _SKIP_TRAFFIC,
-    _TRIP_RE,
-    _split_computations,
-    _type_bytes,
+try:
+    import repro  # noqa: F401  (PYTHONPATH=src already set)
+except ImportError:  # bare checkout: resolve src/ relative to this file
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.hlo import (
+    SKIP_TRAFFIC,
+    scaled_instructions,
+    split_computations,
+    type_bytes,
 )
 
 
 def top_ops(path, k=25):
     hlo = open(path).read()
-    comps = _split_computations(hlo)
-    entry = comps["__entry__"]
-    # compute multipliers: walk while nesting
     items = []
-
-    def walk(name, mult):
-        comp = comps.get(name)
-        if comp is None:
-            return
-        for ins in comp.instrs:
-            if ins.op == "while":
-                m = _TRIP_RE.search(ins.line)
-                trips = int(m.group(1)) if m else 1
-                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
-                if bm:
-                    walk(bm.group(1), mult * trips)
-                continue
-            if ins.op in ("call", "conditional", "async-start"):
-                for key in ("calls", "to_apply", "branch_computations"):
-                    mm = re.search(key + r"=\{?([^,}\s]+)", ins.line)
-                    if mm:
-                        walk(mm.group(1).strip().lstrip("%"), mult)
-                continue
-            if ins.op in _SKIP_TRAFFIC:
-                continue
-            rb = _type_bytes(ins.type_str) * 2 * mult
-            items.append((rb, ins.op, ins.type_str[:60], ins.name[:40], mult))
-
-    walk(entry.name, 1)
+    for ins, mult in scaled_instructions(split_computations(hlo)):
+        if ins.op in SKIP_TRAFFIC:
+            continue
+        rb = type_bytes(ins.type_str) * 2 * mult
+        items.append((rb, ins.op, ins.type_str[:60], ins.name[:40], mult))
     items.sort(reverse=True)
     total = sum(i[0] for i in items)
     print(f"total traffic: {total / 1e9:.1f} GB")
-    for rb, op, t, nm, mult in items[:k]:
+    for rb, op, t, _nm, mult in items[:k]:
         print(f"{rb / 1e9:9.2f} GB  x{mult:<5} {op:<22} {t}")
 
 
-top_ops(sys.argv[1])
+if __name__ == "__main__":
+    top_ops(sys.argv[1])
