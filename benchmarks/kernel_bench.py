@@ -78,7 +78,10 @@ def _paged_attn_case(b=4, page_len=16, nb=32, g=2, r=2, d=16,
                      lengths=(512, 300, 64, 17)):
     """Long-context decode tick: 4 slots over a 512-token table, lengths
     spread so the dense gather streams 4x32 pages while the kernel walk
-    touches only ceil(len/page_len) per slot."""
+    touches only ceil(len/page_len) per slot.  Defaults are the RAGGED512
+    geometry the static kernel audit registers — one geometry, one table
+    builder, so bench and audit gate the same number."""
+    from repro.kernels.paged_attention.kernel import make_page_table
     rng = np.random.default_rng(3)
     lens = np.asarray(lengths, np.int32)
     n_pages = 1 + b * nb
@@ -86,12 +89,7 @@ def _paged_attn_case(b=4, page_len=16, nb=32, g=2, r=2, d=16,
                     jnp.float32)
     v = jnp.asarray(rng.standard_normal((n_pages, page_len, g, d)),
                     jnp.float32)
-    table = np.zeros((b, nb), np.int32)
-    nxt = 1
-    for i, ln in enumerate(lens):
-        for j in range(-(-int(ln) // page_len)):
-            table[i, j] = nxt
-            nxt += 1
+    table = make_page_table(lens, nb, page_len)
     q = jnp.asarray(rng.standard_normal((b, 1, g * r, d)), jnp.float32)
     return q, k, v, jnp.asarray(table), jnp.asarray(lens), table, lens
 
@@ -125,8 +123,21 @@ def paged_attn_gate_rows() -> dict:
     bit = float(all(np.array_equal(tok(ref), tok(o)) for o in outs.values()))
     touched, total = gather_traffic_counts(table_np, lens_np,
                                            page_len=k.shape[1])
+
+    # static estimator rows (EXACT-gated): the audit's ragged512.s1
+    # instantiation IS this bench geometry, so the bench baseline and the
+    # kernel-audit baseline share one number
+    from repro.analysis.kernel_rules import static_traffic
+    from repro.analysis.pallas_inspect import vmem_footprint
+    from repro.kernels.paged_attention.kernel import audit_specs
+    inst = next(i for i in audit_specs() if i.case == "ragged512.s1")
+    rec, disagreements = static_traffic(inst)
+    assert not disagreements, disagreements
     return {"tokens_bit_equal": bit,
             "gather_saved_frac": 1.0 - touched / total,
+            "vmem_bytes": float(vmem_footprint(inst)["vmem_bytes"]),
+            "static_bytes_moved": float(rec["bytes_read"]
+                                        + rec["bytes_written"]),
             "dense_gather_us": us_dense,
             "kernel_split1_us": times[1],
             "kernel_split4_us": times[4]}

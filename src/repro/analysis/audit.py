@@ -5,7 +5,9 @@ It never executes a serve program — rule families 1-2 run on jaxprs
 (trace only), family 3 on optimized HLO (compile only), and family 4
 (the recompile census) is the one deliberate exception: it drives a tiny
 scripted sweep because caching behavior is not a property of any single
-traced program (see ``analysis/recompile.py``).
+traced program (see ``analysis/recompile.py``).  Family 5 (the static
+Pallas kernel verifier, ``analysis/kernel_rules.py``) covers the one
+boundary families 1-4 cannot see through: ``pallas_call``.
 
 Rule applicability is part of the contract, not an optimization:
 
@@ -21,30 +23,52 @@ Rule applicability is part of the contract, not an optimization:
 * HLO budgets — mesh variants, per-tick programs (``tick``/``mixed``):
   those run every serving tick, so their collective census IS the
   steady-state interconnect bill.
+* kernel rules — device-count independent (``--kernels``): they sweep the
+  registered kernel instantiations, not the variant matrix.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 from repro.analysis import budgets as budgets_mod
-from repro.analysis import jaxpr_rules, sharding_rules
-from repro.analysis.programs import (AUDIT_N_PAGES, Variant, audit_model,
-                                     build_scheduler, program_hlo,
-                                     variant_matrix)
+from repro.analysis import jaxpr_rules, kernel_rules, sharding_rules
+from repro.analysis.programs import (
+    AUDIT_N_PAGES,
+    Variant,
+    audit_model,
+    build_scheduler,
+    program_hlo,
+    variant_matrix,
+)
 from repro.analysis.report import AuditReport, Finding
 
-RULES = ("no-host-callback", "no-double-precision", "no-integer-upcast",
-         "no-dense-pool-gather", "sharded-rearrange", "hlo-budget",
-         "recompile-census")
+RULES = (
+    "no-host-callback",
+    "no-double-precision",
+    "no-integer-upcast",
+    "no-dense-pool-gather",
+    "sharded-rearrange",
+    "hlo-budget",
+    "recompile-census",
+)
+
+# every rule id any family can emit — the waiver loader validates against
+# this so a typo'd waiver fails loudly instead of sitting inert
+ALL_RULES = RULES + kernel_rules.KERNEL_RULES
 
 BUDGET_PROGRAMS = ("tick", "mixed")
 
 
-def audit_variant(variant: Variant, report: AuditReport, *,
-                  cfg=None, params=None,
-                  with_budgets: bool = True,
-                  log=lambda msg: None) -> None:
+def audit_variant(
+    variant: Variant,
+    report: AuditReport,
+    *,
+    cfg=None,
+    params=None,
+    with_budgets: bool = True,
+    log=lambda msg: None,
+) -> None:
     """Trace/lower every program of one variant and run the static rules,
     appending findings and budget records to ``report`` in place."""
     sched = build_scheduler(variant, cfg=cfg, params=params)
@@ -58,8 +82,7 @@ def audit_variant(variant: Variant, report: AuditReport, *,
         if variant.quant:
             fnd += jaxpr_rules.rule_no_integer_upcast(jaxpr, name, prog)
         if variant.attn_kernel and prog == "tick":
-            fnd += jaxpr_rules.rule_no_dense_pool_gather(
-                jaxpr, name, prog, n_pages=AUDIT_N_PAGES)
+            fnd += jaxpr_rules.rule_no_dense_pool_gather(jaxpr, name, prog, n_pages=AUDIT_N_PAGES)
         if variant.mesh_spec:
             fnd += sharding_rules.rule_sharded_rearrange(jaxpr, name, prog)
         report.findings.extend(fnd)
@@ -67,17 +90,21 @@ def audit_variant(variant: Variant, report: AuditReport, *,
         if with_budgets and variant.mesh_spec and prog in BUDGET_PROGRAMS:
             key = f"{name}/{prog}"
             log(f"  lowering {key} for budgets...")
-            report.budgets[key] = budgets_mod.program_budget(
-                program_hlo(fn, args))
+            report.budgets[key] = budgets_mod.program_budget(program_hlo(fn, args))
     report.variants.append(name)
 
 
-def run_audit(mesh_specs: Optional[Sequence[Optional[str]]] = None, *,
-              baseline_path: str = budgets_mod.BASELINE_PATH,
-              update_baselines: bool = False,
-              with_budgets: bool = True,
-              with_recompile: bool = True,
-              log=lambda msg: None) -> AuditReport:
+def run_audit(
+    mesh_specs: Optional[Sequence[Optional[str]]] = None,
+    *,
+    baseline_path: str = budgets_mod.BASELINE_PATH,
+    kernel_baseline_path: str = kernel_rules.KERNEL_BASELINE_PATH,
+    update_baselines: bool = False,
+    with_budgets: bool = True,
+    with_recompile: bool = True,
+    with_kernels: bool = False,
+    log=lambda msg: None,
+) -> AuditReport:
     """Audit every variant the device count allows.
 
     Mesh variants needing more devices than are visible are skipped with a
@@ -95,13 +122,14 @@ def run_audit(mesh_specs: Optional[Sequence[Optional[str]]] = None, *,
     skipped = 0
     for variant in variant_matrix(mesh_specs):
         if variant.n_devices > n_dev:
-            log(f"SKIP {variant.name}: needs {variant.n_devices} devices, "
-                f"have {n_dev} (use --host-devices)")
+            log(
+                f"SKIP {variant.name}: needs {variant.n_devices} devices, "
+                f"have {n_dev} (use --host-devices)"
+            )
             skipped += 1
             continue
         log(f"auditing {variant.name}...")
-        audit_variant(variant, report, cfg=cfg, params=params,
-                      with_budgets=with_budgets, log=log)
+        audit_variant(variant, report, cfg=cfg, params=params, with_budgets=with_budgets, log=log)
 
     if with_budgets and report.budgets:
         if update_baselines:
@@ -112,16 +140,24 @@ def run_audit(mesh_specs: Optional[Sequence[Optional[str]]] = None, *,
             if skipped:
                 # partial run (too few devices): gate only what was audited
                 # — do not flag baselines this run could not recompute
-                baseline = {k: v for k, v in baseline.items()
-                            if k in report.budgets}
-            report.findings.extend(budgets_mod.check_budgets(
-                report.budgets, baseline))
+                baseline = {k: v for k, v in baseline.items() if k in report.budgets}
+            report.findings.extend(budgets_mod.check_budgets(report.budgets, baseline))
 
     if with_recompile:
         log("recompile audit (scripted sweep)...")
         from repro.analysis.recompile import run_recompile_audit
+
         fnd, census = run_recompile_audit()
         report.findings.extend(fnd)
         report.census = {k: int(v) for k, v in census.items()}
+
+    if with_kernels:
+        log("kernel audit (static pallas verifier)...")
+        report.rules_run.extend(kernel_rules.KERNEL_RULES)
+        fnd, records = kernel_rules.run_kernel_audit(
+            kernel_baseline_path, update_baselines=update_baselines, log=log
+        )
+        report.findings.extend(fnd)
+        report.kernels = records
 
     return report

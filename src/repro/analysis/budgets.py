@@ -31,10 +31,8 @@ def program_budget(hlo: str) -> Dict:
     totals = analyze_hlo(hlo)
     census = collective_census(hlo)
     return {
-        "collectives": {k: int(v["count"])
-                        for k, v in sorted(census.items())},
-        "collective_bytes": {k: float(v["bytes"])
-                             for k, v in sorted(census.items())},
+        "collectives": {k: int(v["count"]) for k, v in sorted(census.items())},
+        "collective_bytes": {k: float(v["bytes"]) for k, v in sorted(census.items())},
         "traffic_bytes": float(totals["traffic_bytes"]),
     }
 
@@ -44,11 +42,15 @@ def load_baseline(path: str = BASELINE_PATH) -> Dict[str, Dict]:
         return json.load(f).get("programs", {})
 
 
-def save_baseline(budgets: Dict[str, Dict], path: str = BASELINE_PATH,
-                  note: Optional[str] = None) -> None:
+def save_baseline(
+    budgets: Dict[str, Dict], path: str = BASELINE_PATH, note: Optional[str] = None
+) -> None:
     doc = {
-        "note": note or ("per-program collective/traffic budgets — "
-                         "regenerate with tools/audit.py --update-baselines"),
+        "note": note
+        or (
+            "per-program collective/traffic budgets — "
+            "regenerate with tools/audit.py --update-baselines"
+        ),
         "programs": {k: budgets[k] for k in sorted(budgets)},
     }
     with open(path, "w") as f:
@@ -56,8 +58,9 @@ def save_baseline(budgets: Dict[str, Dict], path: str = BASELINE_PATH,
         f.write("\n")
 
 
-def check_budgets(fresh: Dict[str, Dict], baseline: Dict[str, Dict], *,
-                  bytes_rtol: float = BYTES_RTOL) -> List[Finding]:
+def check_budgets(
+    fresh: Dict[str, Dict], baseline: Dict[str, Dict], *, bytes_rtol: float = BYTES_RTOL
+) -> List[Finding]:
     """Compare freshly-computed budgets against the committed baseline.
 
     * collective COUNTS: exact — one extra all-gather launch is a bug.
@@ -70,41 +73,60 @@ def check_budgets(fresh: Dict[str, Dict], baseline: Dict[str, Dict], *,
 
     def fi(key: str, detail: str) -> Finding:
         variant, _, program = key.partition("/")
-        return Finding(rule="hlo-budget", variant=variant, program=program,
-                       detail=detail)
+        return Finding(rule="hlo-budget", variant=variant, program=program, detail=detail)
 
     for key in sorted(set(fresh) | set(baseline)):
         if key not in baseline:
-            out.append(fi(key, "program has no committed budget — run "
-                               "tools/audit.py --update-baselines"))
+            out.append(
+                fi(key, "program has no committed budget — run tools/audit.py --update-baselines")
+            )
             continue
         if key not in fresh:
-            out.append(fi(key, "program in baseline but no longer audited "
-                               "— run tools/audit.py --update-baselines"))
+            out.append(
+                fi(
+                    key,
+                    "program in baseline but no longer audited — run tools/audit.py --update-baselines",
+                )
+            )
             continue
         got, want = fresh[key], baseline[key]
         gc, wc = got["collectives"], want["collectives"]
         for kind in sorted(set(gc) | set(wc)):
             g, w = int(gc.get(kind, 0)), int(wc.get(kind, 0))
             if g != w:
-                out.append(fi(key, f"{kind} count {g} != budget {w} "
-                                   f"(exact gate: every launch is "
-                                   f"per-tick serving cost)"))
+                out.append(
+                    fi(
+                        key,
+                        f"{kind} count {g} != budget {w} "
+                        f"(exact gate: every launch is "
+                        f"per-tick serving cost)",
+                    )
+                )
         for field, gb in (("traffic_bytes", got["traffic_bytes"]),):
             wb = float(want.get(field, 0.0))
             if wb == 0.0 and gb == 0.0:
                 continue
             rel = abs(gb - wb) / max(abs(wb), 1.0)
             if rel > bytes_rtol:
-                out.append(fi(key, f"{field} {gb:.3e} vs budget {wb:.3e} "
-                                   f"(rel {rel:.1%} > {bytes_rtol:.0%})"))
+                out.append(
+                    fi(
+                        key,
+                        f"{field} {gb:.3e} vs budget {wb:.3e} "
+                        f"(rel {rel:.1%} > {bytes_rtol:.0%})",
+                    )
+                )
         gkb = got.get("collective_bytes", {})
         wkb = want.get("collective_bytes", {})
         for kind in sorted(set(gkb) | set(wkb)):
             g, w = float(gkb.get(kind, 0.0)), float(wkb.get(kind, 0.0))
             rel = abs(g - w) / max(abs(w), 1.0)
             if rel > bytes_rtol:
-                out.append(fi(key, f"{kind} bytes {g:.3e} vs budget "
-                                   f"{w:.3e} (rel {rel:.1%} > "
-                                   f"{bytes_rtol:.0%})"))
+                out.append(
+                    fi(
+                        key,
+                        f"{kind} bytes {g:.3e} vs budget "
+                        f"{w:.3e} (rel {rel:.1%} > "
+                        f"{bytes_rtol:.0%})",
+                    )
+                )
     return out

@@ -35,10 +35,28 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Tuple
 
 DTYPE_BYTES = {
-    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
-    "f4e2m1fn": 0.5, "token": 0, "opaque": 0,
+    "pred": 1,
+    "s4": 0.5,
+    "u4": 0.5,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "s32": 4,
+    "u32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f16": 2,
+    "bf16": 2,
+    "f32": 4,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "f4e2m1fn": 0.5,
+    "token": 0,
+    "opaque": 0,
 }
 
 SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
@@ -47,12 +65,21 @@ OP_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
 OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 CONST_RE = re.compile(r"constant\((\d+)\)")
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
 
-SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
-                "bitcast", "copy-start", "copy-done", "after-all",
-                "partition-id", "replica-id", "iota"}
+SKIP_TRAFFIC = {
+    "parameter",
+    "constant",
+    "tuple",
+    "get-tuple-element",
+    "bitcast",
+    "copy-start",
+    "copy-done",
+    "after-all",
+    "partition-id",
+    "replica-id",
+    "iota",
+}
 
 
 def type_bytes(type_str: str) -> float:
@@ -111,8 +138,9 @@ def split_computations(hlo: str) -> Dict[str, Computation]:
             continue
         om = OP_RE.match(stripped)
         if om:
-            ins = Instr(name=om.group(1), type_str=om.group(2).strip(),
-                        op=om.group(3), line=stripped)
+            ins = Instr(
+                name=om.group(1), type_str=om.group(2).strip(), op=om.group(3), line=stripped
+            )
             cur.instrs.append(ins)
             cur.symbols[ins.name] = ins.type_str
     return comps
@@ -133,8 +161,7 @@ def operand_names(line: str) -> List[str]:
 
 def called_computations(line: str) -> List[str]:
     out = []
-    for key in ("body", "condition", "calls", "to_apply",
-                "branch_computations"):
+    for key in ("body", "condition", "calls", "to_apply", "branch_computations"):
         m = re.search(key + r"=\{?([^,}\s]+(?:,\s*[^,}\s]+)*)\}?", line)
         if m:
             for c in m.group(1).split(","):
@@ -151,8 +178,7 @@ def trip_count(ins: Instr, comps: Dict[str, Computation]) -> Optional[int]:
         return int(m.group(1))
     cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
     if cm and cm.group(1) in comps:
-        consts = [int(c) for i in comps[cm.group(1)].instrs
-                  for c in CONST_RE.findall(i.line)]
+        consts = [int(c) for i in comps[cm.group(1)].instrs for c in CONST_RE.findall(i.line)]
         consts = [c for c in consts if c > 0]
         if consts:
             return max(consts)
@@ -169,9 +195,10 @@ def collective_base(op: str) -> Optional[str]:
     return base if base in COLLECTIVES else None
 
 
-def scaled_instructions(comps: Dict[str, Computation],
-                        entry: Optional[str] = None,
-                        ) -> Iterator[Tuple[Instr, int]]:
+def scaled_instructions(
+    comps: Dict[str, Computation],
+    entry: Optional[str] = None,
+) -> Iterator[Tuple[Instr, int]]:
     """Yield ``(instr, multiplier)`` for every *top-level* instruction
     reachable from the entry, loop-scaled: instructions inside a ``while``
     body carry the loop's static trip count (nested loops multiply),
@@ -201,8 +228,7 @@ def scaled_instructions(comps: Dict[str, Computation],
                 for key in ("calls", "to_apply", "branch_computations"):
                     mm = re.search(key + r"=\{?([^,}\s]+)", ins.line)
                     if mm:
-                        yield from walk(mm.group(1).strip().lstrip("%"),
-                                        mult)
+                        yield from walk(mm.group(1).strip().lstrip("%"), mult)
                 continue
             yield ins, mult
 
@@ -249,12 +275,12 @@ def dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
     elif ins.op == "convolution":
         # contracted size = kernel spatial x input features (approx: rhs
         # elements / output features)
-        rhs_dims = (first_array_dims(symbols.get(opnds[1], ""))
-                    if len(opnds) > 1 else [])
+        rhs_dims = first_array_dims(symbols.get(opnds[1], "")) if len(opnds) > 1 else []
         out_dims = first_array_dims(ins.type_str)
         if rhs_dims and out_dims:
-            contract = max(1.0, float(int(
-                __import__("numpy").prod(rhs_dims))) / max(out_dims[-1], 1))
+            contract = max(
+                1.0, float(int(__import__("numpy").prod(rhs_dims))) / max(out_dims[-1], 1)
+            )
     return 2.0 * out_elems * contract
 
 
@@ -262,13 +288,15 @@ def dot_flops(ins: Instr, symbols: Dict[str, str]) -> float:
 class Totals:
     flops: float = 0.0
     traffic_bytes: float = 0.0
-    collective_bytes: Dict[str, float] = field(
-        default_factory=lambda: defaultdict(float))
+    collective_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     unknown_trip_loops: int = 0
 
     def scaled(self, k: float) -> "Totals":
-        t = Totals(flops=self.flops * k, traffic_bytes=self.traffic_bytes * k,
-                   unknown_trip_loops=self.unknown_trip_loops)
+        t = Totals(
+            flops=self.flops * k,
+            traffic_bytes=self.traffic_bytes * k,
+            unknown_trip_loops=self.unknown_trip_loops,
+        )
         for kk, v in self.collective_bytes.items():
             t.collective_bytes[kk] = v * k
         return t
@@ -312,7 +340,7 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
         key = (name, top_level)
         if key in memo:
             return memo[key]
-        memo[key] = Totals()                                  # cycle guard
+        memo[key] = Totals()  # cycle guard
         comp = comps.get(name)
         if comp is None:
             return memo[key]
@@ -349,8 +377,7 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
             if ins.op == "dynamic-update-slice":
                 if top_level:
                     ops_ = operand_names(ins.line)
-                    ub = (type_bytes(comp.symbols.get(ops_[1], ""))
-                          if len(ops_) > 1 else rb)
+                    ub = type_bytes(comp.symbols.get(ops_[1], "")) if len(ops_) > 1 else rb
                     t.traffic_bytes += 2.0 * ub
                 continue
 
@@ -377,8 +404,7 @@ def analyze_hlo(hlo: str) -> Dict[str, float]:
     # entry parameters (weights/caches) are materialized buffers no op
     # produces — count one read of each (loop xs slicing reads each element
     # once per step; FSDP re-gathers already appear as all-gather results)
-    param_bytes = sum(type_bytes(i.type_str) for i in entry.instrs
-                      if i.op == "parameter")
+    param_bytes = sum(type_bytes(i.type_str) for i in entry.instrs if i.op == "parameter")
     return {
         "flops": total.flops,
         "traffic_bytes": total.traffic_bytes + param_bytes,

@@ -79,10 +79,17 @@ def _avals(eqn):
 # rules
 # ---------------------------------------------------------------------------
 
-CALLBACK_PRIMS = frozenset({
-    "pure_callback", "io_callback", "debug_callback", "outside_call",
-    "host_callback_call", "infeed", "outfeed",
-})
+CALLBACK_PRIMS = frozenset(
+    {
+        "pure_callback",
+        "io_callback",
+        "debug_callback",
+        "outside_call",
+        "host_callback_call",
+        "infeed",
+        "outfeed",
+    }
+)
 
 
 def rule_no_host_callback(jaxpr, variant: str, program: str) -> List[Finding]:
@@ -92,9 +99,14 @@ def rule_no_host_callback(jaxpr, variant: str, program: str) -> List[Finding]:
     for eqn in iter_eqns(jaxpr):
         name = eqn.primitive.name
         if name in CALLBACK_PRIMS or "callback" in name:
-            out.append(Finding(
-                rule="no-host-callback", variant=variant, program=program,
-                detail=f"host-syncing primitive {name!r} in the program"))
+            out.append(
+                Finding(
+                    rule="no-host-callback",
+                    variant=variant,
+                    program=program,
+                    detail=f"host-syncing primitive {name!r} in the program",
+                )
+            )
     return out
 
 
@@ -102,21 +114,26 @@ _WIDE_FLOAT = ("float64", "complex128")
 _WIDE_INT = ("int64", "uint64")
 
 
-def rule_no_double_precision(jaxpr, variant: str,
-                             program: str) -> List[Finding]:
+def rule_no_double_precision(jaxpr, variant: str, program: str) -> List[Finding]:
     """No f64/c128 value may appear anywhere in a serve program — CPU smoke
     silently tolerates them; accelerators pay double bandwidth (or trap)."""
     out = []
     for eqn in iter_eqns(jaxpr):
         for aval in _avals(eqn):
             if str(aval.dtype) in _WIDE_FLOAT:
-                out.append(Finding(
-                    rule="no-double-precision", variant=variant,
-                    program=program,
-                    detail=(f"{aval.dtype} value of shape "
+                out.append(
+                    Finding(
+                        rule="no-double-precision",
+                        variant=variant,
+                        program=program,
+                        detail=(
+                            f"{aval.dtype} value of shape "
                             f"{tuple(aval.shape)} at primitive "
-                            f"{eqn.primitive.name!r}")))
-                break                       # one finding per eqn is enough
+                            f"{eqn.primitive.name!r}"
+                        ),
+                    )
+                )
+                break  # one finding per eqn is enough
     return out
 
 
@@ -128,18 +145,23 @@ def rule_no_integer_upcast(jaxpr, variant: str, program: str) -> List[Finding]:
     for eqn in iter_eqns(jaxpr):
         for aval in _avals(eqn):
             if str(aval.dtype) in _WIDE_INT:
-                out.append(Finding(
-                    rule="no-integer-upcast", variant=variant,
-                    program=program,
-                    detail=(f"{aval.dtype} value of shape "
+                out.append(
+                    Finding(
+                        rule="no-integer-upcast",
+                        variant=variant,
+                        program=program,
+                        detail=(
+                            f"{aval.dtype} value of shape "
                             f"{tuple(aval.shape)} at primitive "
-                            f"{eqn.primitive.name!r}")))
+                            f"{eqn.primitive.name!r}"
+                        ),
+                    )
+                )
                 break
     return out
 
 
-def rule_no_dense_pool_gather(jaxpr, variant: str, program: str, *,
-                              n_pages: int) -> List[Finding]:
+def rule_no_dense_pool_gather(jaxpr, variant: str, program: str, *, n_pages: int) -> List[Finding]:
     """Kernel-enabled tick programs must never gather the KV page pool.
 
     The dense fallback is ``pool[table]`` (``models.attention._paged_gather``)
@@ -160,13 +182,20 @@ def rule_no_dense_pool_gather(jaxpr, variant: str, program: str, *,
             continue
         if n_pages in tuple(aval.shape):
             gathered = getattr(eqn.outvars[0], "aval", None)
-            out.append(Finding(
-                rule="no-dense-pool-gather", variant=variant, program=program,
-                detail=(f"float gather reads the page pool: operand "
+            out.append(
+                Finding(
+                    rule="no-dense-pool-gather",
+                    variant=variant,
+                    program=program,
+                    detail=(
+                        f"float gather reads the page pool: operand "
                         f"{tuple(aval.shape)} ({aval.dtype}) -> "
                         f"{tuple(gathered.shape) if gathered is not None else '?'}"
                         f" — dense pool[table] fallback while the paged-"
-                        f"attention kernel is enabled")))
+                        f"attention kernel is enabled"
+                    ),
+                )
+            )
     return out
 
 
@@ -178,7 +207,8 @@ def make_program_jaxpr(fn, args) -> core.ClosedJaxpr:
     binding their calls enter) and ``jitted``; plain jits trace directly.
     """
     import contextlib
+
     ctx = getattr(fn, "trace_context", None)
     target = getattr(fn, "jitted", fn)
-    with (ctx() if ctx is not None else contextlib.nullcontext()):
+    with ctx() if ctx is not None else contextlib.nullcontext():
         return jax.make_jaxpr(target)(*args)

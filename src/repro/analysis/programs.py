@@ -33,21 +33,24 @@ AUDIT_SLOTS = 4
 AUDIT_TICK_STEPS = 2
 AUDIT_CHUNK_LEN = 8
 AUDIT_PAGE_LEN = 4
-AUDIT_N_PAGES = 34      # distinctive page-axis size — see module docstring
+AUDIT_N_PAGES = 34  # distinctive page-axis size — see module docstring
 
 MODES = ("bucketed", "chunked", "paged", "paged_kernel")
 
 
 @dataclasses.dataclass(frozen=True)
 class Variant:
-    mode: str                      # one of MODES
-    quant: bool                    # shift-add integer path
-    mesh_spec: Optional[str]       # None (single device) or "DxM" e.g. "2x2"
+    mode: str  # one of MODES
+    quant: bool  # shift-add integer path
+    mesh_spec: Optional[str]  # None (single device) or "DxM" e.g. "2x2"
 
     @property
     def name(self) -> str:
-        return (self.mode + ("-quant" if self.quant else "")
-                + (f"@{self.mesh_spec}" if self.mesh_spec else ""))
+        return (
+            self.mode
+            + ("-quant" if self.quant else "")
+            + (f"@{self.mesh_spec}" if self.mesh_spec else "")
+        )
 
     @property
     def paged(self) -> bool:
@@ -65,13 +68,11 @@ class Variant:
         return int(d) * int(m)
 
 
-def variant_matrix(mesh_specs: Sequence[Optional[str]] = (None, "2x2"),
-                   ) -> List[Variant]:
+def variant_matrix(mesh_specs: Sequence[Optional[str]] = (None, "2x2")) -> List[Variant]:
     """The full registry, single-device variants first (cheapest to trace)."""
-    return [Variant(mode, quant, ms)
-            for ms in mesh_specs
-            for mode in MODES
-            for quant in (False, True)]
+    return [
+        Variant(mode, quant, ms) for ms in mesh_specs for mode in MODES for quant in (False, True)
+    ]
 
 
 def audit_model():
@@ -103,17 +104,28 @@ def build_scheduler(variant: Variant, cfg=None, params=None):
     mesh = None
     if variant.mesh_spec:
         from repro.launch.mesh import make_serve_mesh
+
         mesh = make_serve_mesh(variant.mesh_spec)
-    kw = dict(max_slots=AUDIT_SLOTS, max_len=AUDIT_MAX_LEN,
-              buckets=AUDIT_BUCKETS, quant=variant.quant,
-              tick_steps=AUDIT_TICK_STEPS, mesh=mesh)
+    kw = dict(
+        max_slots=AUDIT_SLOTS,
+        max_len=AUDIT_MAX_LEN,
+        buckets=AUDIT_BUCKETS,
+        quant=variant.quant,
+        tick_steps=AUDIT_TICK_STEPS,
+        mesh=mesh,
+    )
     if variant.mode == "chunked":
         kw.update(chunked="always", chunk_len=AUDIT_CHUNK_LEN)
     elif variant.paged:
-        kw.update(paged=True, page_len=AUDIT_PAGE_LEN,
-                  n_pages=AUDIT_N_PAGES, prefix_cache=True,
-                  chunked="auto", chunk_len=AUDIT_CHUNK_LEN,
-                  attn_kernel=variant.attn_kernel)
+        kw.update(
+            paged=True,
+            page_len=AUDIT_PAGE_LEN,
+            n_pages=AUDIT_N_PAGES,
+            prefix_cache=True,
+            chunked="auto",
+            chunk_len=AUDIT_CHUNK_LEN,
+            attn_kernel=variant.attn_kernel,
+        )
     return ServeScheduler(cfg, params, **kw)
 
 

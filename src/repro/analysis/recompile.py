@@ -27,9 +27,13 @@ from repro.analysis.report import Finding
 VARIANT = "recompile-sweep"
 
 
-def check_census(census: Dict[str, int], expect: Dict[str, int],
-                 variant: str = VARIANT, *,
-                 stage: str = "census") -> List[Finding]:
+def check_census(
+    census: Dict[str, int],
+    expect: Dict[str, int],
+    variant: str = VARIANT,
+    *,
+    stage: str = "census",
+) -> List[Finding]:
     """Compare an observed compile census against the expected one —
     exact, including a probe-unavailable (-1) guard."""
     out: List[Finding] = []
@@ -37,20 +41,41 @@ def check_census(census: Dict[str, int], expect: Dict[str, int],
         got = census.get(prog)
         want = expect.get(prog)
         if got is None or want is None:
-            out.append(Finding(
-                rule="recompile-census", variant=variant, program=str(prog),
-                detail=f"{stage}: program present on one side only "
-                       f"(got={got}, want={want})"))
+            out.append(
+                Finding(
+                    rule="recompile-census",
+                    variant=variant,
+                    program=str(prog),
+                    detail=(
+                        f"{stage}: program present on one side only "
+                        f"(got={got}, want={want})"
+                    ),
+                )
+            )
         elif got == -1:
-            out.append(Finding(
-                rule="recompile-census", variant=variant, program=str(prog),
-                detail=f"{stage}: compiled-program probe unavailable "
-                       f"(jax dropped _cache_size?)"))
+            out.append(
+                Finding(
+                    rule="recompile-census",
+                    variant=variant,
+                    program=str(prog),
+                    detail=(
+                        f"{stage}: compiled-program probe unavailable "
+                        f"(jax dropped _cache_size?)"
+                    ),
+                )
+            )
         elif got != want:
-            out.append(Finding(
-                rule="recompile-census", variant=variant, program=str(prog),
-                detail=f"{stage}: {got} compiled programs, expected {want} "
-                       f"(shape-keyed retrace leak)"))
+            out.append(
+                Finding(
+                    rule="recompile-census",
+                    variant=variant,
+                    program=str(prog),
+                    detail=(
+                        f"{stage}: {got} compiled programs, expected {want} "
+                        f"(shape-keyed retrace leak)"
+                    ),
+                )
+            )
     return out
 
 
@@ -58,25 +83,35 @@ def _sweep(sched, prompts: List[Tuple[int, int]]) -> None:
     """Submit (length, max_new) prompts and drain the scheduler."""
     rng = np.random.default_rng(0)
     for length, max_new in prompts:
-        sched.submit(rng.integers(0, sched.cfg.vocab_size, size=length,
-                                  dtype=np.int32), max_new)
+        sched.submit(rng.integers(0, sched.cfg.vocab_size, size=length, dtype=np.int32), max_new)
     sched.run()
 
 
 def run_recompile_audit() -> Tuple[List[Finding], Dict[str, int]]:
     """The scripted traffic sweep (see module docstring).  Returns
     (findings, final census) — an empty findings list is the pass."""
-    from repro.analysis.programs import (AUDIT_BUCKETS, AUDIT_CHUNK_LEN,
-                                         AUDIT_MAX_LEN, AUDIT_SLOTS,
-                                         AUDIT_TICK_STEPS, audit_model)
+    from repro.analysis.programs import (
+        AUDIT_BUCKETS,
+        AUDIT_CHUNK_LEN,
+        AUDIT_MAX_LEN,
+        AUDIT_SLOTS,
+        AUDIT_TICK_STEPS,
+        audit_model,
+    )
     from repro.serving import engine
     from repro.serving.scheduler import ServeScheduler
 
     cfg, params = audit_model()
-    sched = ServeScheduler(cfg, params, max_slots=AUDIT_SLOTS,
-                           max_len=AUDIT_MAX_LEN, buckets=AUDIT_BUCKETS,
-                           tick_steps=AUDIT_TICK_STEPS,
-                           chunked="auto", chunk_len=AUDIT_CHUNK_LEN)
+    sched = ServeScheduler(
+        cfg,
+        params,
+        max_slots=AUDIT_SLOTS,
+        max_len=AUDIT_MAX_LEN,
+        buckets=AUDIT_BUCKETS,
+        tick_steps=AUDIT_TICK_STEPS,
+        chunked="auto",
+        chunk_len=AUDIT_CHUNK_LEN,
+    )
     findings: List[Finding] = []
 
     # phase 1: one over-bucket prompt ALONE — its ingestion runs chunk-only
@@ -85,8 +120,7 @@ def run_recompile_audit() -> Tuple[List[Finding], Dict[str, int]]:
     # phase 2: mixed traffic — both buckets, plus an over-bucket prompt
     # ingesting WHILE others decode (compiles the mixed program)
     _sweep(sched, [(5, 6), (12, 6), (24, 6), (7, 4)])
-    expect = {"prefill": len(AUDIT_BUCKETS), "tick": 1, "write_slot": 1,
-              "chunk": 1, "mixed": 1}
+    expect = {"prefill": len(AUDIT_BUCKETS), "tick": 1, "write_slot": 1, "chunk": 1, "mixed": 1}
     findings += check_census(sched.compile_stats(), expect, stage="cold")
 
     # phase 3: REPLAY different lengths hitting the same buckets/chunks —
@@ -98,23 +132,38 @@ def run_recompile_audit() -> Tuple[List[Finding], Dict[str, int]]:
     # degenerate 1x1 mesh — two distinct generate-LRU entries (building the
     # jitted wrappers compiles nothing)
     import jax
+
     fp_none = engine.mesh_fingerprint(None)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     fp_mesh = engine.mesh_fingerprint(mesh)
     if fp_none == fp_mesh:
-        findings.append(Finding(
-            rule="recompile-census", variant=VARIANT, program="generate_fn",
-            detail="mesh_fingerprint(None) == mesh_fingerprint(1x1 mesh): "
-                   "sharded/unsharded programs would collide in the LRU"))
+        findings.append(
+            Finding(
+                rule="recompile-census",
+                variant=VARIANT,
+                program="generate_fn",
+                detail=(
+                    "mesh_fingerprint(None) == mesh_fingerprint(1x1 mesh): "
+                    "sharded/unsharded programs would collide in the LRU"
+                ),
+            )
+        )
     before = len(engine.generate_fn)
     fn_plain = engine.generate_fn(cfg, 4, 0.0, False, None, False, mesh=None)
     fn_mesh = engine.generate_fn(cfg, 4, 0.0, False, None, False, mesh=mesh)
     grew = len(engine.generate_fn) - before
     if fn_plain is fn_mesh or grew < 2:
-        findings.append(Finding(
-            rule="recompile-census", variant=VARIANT, program="generate_fn",
-            detail=f"mesh-fingerprint cache collision: unsharded and 1x1-"
-                   f"mesh builds share a program (cache grew {grew}, "
-                   f"expected 2)"))
+        findings.append(
+            Finding(
+                rule="recompile-census",
+                variant=VARIANT,
+                program="generate_fn",
+                detail=(
+                    f"mesh-fingerprint cache collision: unsharded and 1x1-"
+                    f"mesh builds share a program (cache grew {grew}, "
+                    f"expected 2)"
+                ),
+            )
+        )
 
     return findings, sched.compile_stats()

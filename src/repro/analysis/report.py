@@ -12,15 +12,15 @@ from __future__ import annotations
 import fnmatch
 import json
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclass
 class Finding:
-    rule: str          # e.g. "no-dense-pool-gather"
-    variant: str       # e.g. "paged_kernel-quant@2x2"
-    program: str       # e.g. "tick"
-    detail: str        # human-readable evidence (primitive, shapes, dim)
+    rule: str  # e.g. "no-dense-pool-gather"
+    variant: str  # e.g. "paged_kernel-quant@2x2"
+    program: str  # e.g. "tick"
+    detail: str  # human-readable evidence (primitive, shapes, dim)
     waived: bool = False
     waive_reason: Optional[str] = None
 
@@ -31,19 +31,22 @@ class Finding:
 @dataclass
 class Waiver:
     """One committed exception: rule + variant/program glob + reason."""
+
     rule: str
-    match: str         # fnmatch glob over "variant/program"
+    match: str  # fnmatch glob over "variant/program"
     reason: str
 
     def covers(self, f: Finding) -> bool:
-        return (self.rule == f.rule
-                and fnmatch.fnmatch(f"{f.variant}/{f.program}", self.match))
+        return self.rule == f.rule and fnmatch.fnmatch(f"{f.variant}/{f.program}", self.match)
 
 
-def load_waivers(path: str) -> List[Waiver]:
+def load_waivers(path: str, known_rules: Optional[Sequence[str]] = None) -> List[Waiver]:
     """Read ``tools/audit_waivers.json``: ``{"waivers": [{"rule": ...,
     "match": ..., "reason": ...}, ...]}``.  Entries without a non-empty
-    reason string are rejected — the reason IS the point."""
+    reason string are rejected — the reason IS the point.  When
+    ``known_rules`` is given, a waiver naming a rule outside the live
+    registry is rejected too: a typo'd rule id would otherwise sit
+    silently inert while the finding it meant to cover keeps failing."""
     with open(path) as f:
         data = json.load(f)
     out = []
@@ -51,12 +54,16 @@ def load_waivers(path: str) -> List[Waiver]:
         reason = w.get("reason", "")
         if not isinstance(reason, str) or not reason.strip():
             raise ValueError(f"waiver {w!r} has no reason string")
+        if known_rules is not None and w["rule"] not in known_rules:
+            raise ValueError(
+                f"waiver {w!r} names unknown rule {w['rule']!r} — "
+                f"known rules: {', '.join(known_rules)}"
+            )
         out.append(Waiver(rule=w["rule"], match=w["match"], reason=reason))
     return out
 
 
-def apply_waivers(findings: List[Finding],
-                  waivers: List[Waiver]) -> List[Finding]:
+def apply_waivers(findings: List[Finding], waivers: List[Waiver]) -> List[Finding]:
     """Mark waived findings in place; returns the still-failing rest."""
     live = []
     for f in findings:
@@ -74,25 +81,35 @@ def apply_waivers(findings: List[Finding],
 class AuditReport:
     """Everything one ``tools/audit.py`` run produced, JSON-serializable
     (CI uploads it as a workflow artifact next to the bench JSONs)."""
+
     variants: List[str] = field(default_factory=list)
     programs_audited: int = 0
     rules_run: List[str] = field(default_factory=list)
     findings: List[Finding] = field(default_factory=list)
     budgets: Dict[str, dict] = field(default_factory=dict)
     census: Dict[str, dict] = field(default_factory=dict)
+    kernels: Dict[str, dict] = field(default_factory=dict)
 
     @property
     def failures(self) -> List[Finding]:
         return [f for f in self.findings if not f.waived]
 
     def to_json(self) -> str:
-        return json.dumps({
-            "version": 1,
-            "variants": self.variants,
-            "programs_audited": self.programs_audited,
-            "rules_run": self.rules_run,
-            "findings": [asdict(f) for f in self.findings],
-            "budgets": self.budgets,
-            "census": self.census,
-            "n_failures": len(self.failures),
-        }, indent=2, sort_keys=True) + "\n"
+        return (
+            json.dumps(
+                {
+                    "version": 1,
+                    "variants": self.variants,
+                    "programs_audited": self.programs_audited,
+                    "rules_run": self.rules_run,
+                    "findings": [asdict(f) for f in self.findings],
+                    "budgets": self.budgets,
+                    "census": self.census,
+                    "kernels": self.kernels,
+                    "n_failures": len(self.failures),
+                },
+                indent=2,
+                sort_keys=True,
+            )
+            + "\n"
+        )

@@ -33,8 +33,7 @@ from repro.analysis.report import Finding
 # ops that rearrange data along axes (the miscompile surface)
 REARRANGE_PRIMS = ("concatenate", "slice", "split", "reshape")
 # ops a pinned spec survives unchanged (same shape, same layout)
-_TRANSPARENT_PRIMS = ("convert_element_type", "copy", "stop_gradient",
-                      "sharding_constraint")
+_TRANSPARENT_PRIMS = ("convert_element_type", "copy", "stop_gradient", "sharding_constraint")
 
 
 def _lookup(pinned: Dict[object, Tuple[tuple, str]], v):
@@ -72,9 +71,11 @@ def _rearranged_dims(eqn) -> List[int]:
             return []
         starts = eqn.params.get("start_indices", ())
         limits = eqn.params.get("limit_indices", ())
-        return [i for i, (s, l, n) in enumerate(
-            zip(starts, limits, aval.shape))
-            if not (int(s) == 0 and int(l) == int(n))]
+        return [
+            i
+            for i, (s, l, n) in enumerate(zip(starts, limits, aval.shape))
+            if not (int(s) == 0 and int(l) == int(n))
+        ]
     if name == "reshape":
         aval = getattr(eqn.invars[0], "aval", None)
         out = getattr(eqn.outvars[0], "aval", None)
@@ -84,26 +85,25 @@ def _rearranged_dims(eqn) -> List[int]:
         # dims in the preserved common prefix/suffix are untouched; the
         # middle (merged/split) region is the rearranged part
         pre = 0
-        while (pre < len(old) and pre < len(new) and old[pre] == new[pre]):
+        while pre < len(old) and pre < len(new) and old[pre] == new[pre]:
             pre += 1
         suf = 0
-        while (suf < len(old) - pre and suf < len(new) - pre
-               and old[-1 - suf] == new[-1 - suf]):
+        while suf < len(old) - pre and suf < len(new) - pre and old[-1 - suf] == new[-1 - suf]:
             suf += 1
         return list(range(pre, len(old) - suf))
     return []
 
 
-def rule_sharded_rearrange(jaxpr, variant: str, program: str, *,
-                           model_axis: str = "model") -> List[Finding]:
+def rule_sharded_rearrange(
+    jaxpr, variant: str, program: str, *, model_axis: str = "model"
+) -> List[Finding]:
     """Flag rearrange ops whose operand is pinned ``model``-sharded on a
     rearranged dim (see module docstring).  Works on ``Jaxpr`` /
     ``ClosedJaxpr``; recurses into every sub-jaxpr, seeding inner tracking
     from pjit ``in_shardings`` where present."""
     findings: List[Finding] = []
 
-    def walk(j: core.Jaxpr,
-             seed: Dict[object, Tuple[tuple, str]]) -> None:
+    def walk(j: core.Jaxpr, seed: Dict[object, Tuple[tuple, str]]) -> None:
         # var -> (spec entries, where the pin came from)
         pinned: Dict[object, Tuple[tuple, str]] = dict(seed)
         for eqn in j.eqns:
@@ -120,21 +120,26 @@ def rule_sharded_rearrange(jaxpr, variant: str, program: str, *,
                     if entry is None:
                         continue
                     spec, src = entry
-                    hot = sorted(set(dims) & set(_model_dims(spec,
-                                                             model_axis)))
+                    hot = sorted(set(dims) & set(_model_dims(spec, model_axis)))
                     if hot:
                         aval = getattr(v, "aval", None)
-                        findings.append(Finding(
-                            rule="sharded-rearrange", variant=variant,
-                            program=program,
-                            detail=(f"{name} rearranges dim(s) {hot} of a "
+                        findings.append(
+                            Finding(
+                                rule="sharded-rearrange",
+                                variant=variant,
+                                program=program,
+                                detail=(
+                                    f"{name} rearranges dim(s) {hot} of a "
                                     f"tensor pinned {spec} (via {src}, "
                                     f"shape {tuple(aval.shape) if aval is not None else '?'}"
                                     f") — {model_axis}-sharded axis must be "
                                     f"pinned replicated before "
                                     f"split/concat/reshape (jax-0.4.37 "
                                     f"CPU-SPMD miscompile, DESIGN.md "
-                                    f"§Sharded serving)")))
+                                    f"§Sharded serving)"
+                                ),
+                            )
+                        )
                 # rearranged output loses the pin
             elif name in _TRANSPARENT_PRIMS:
                 entry = _lookup(pinned, eqn.invars[0]) if eqn.invars else None
@@ -151,17 +156,19 @@ def rule_sharded_rearrange(jaxpr, variant: str, program: str, *,
                     if entry is not None:
                         outer_aval = getattr(outer_v, "aval", None)
                         inner_aval = getattr(inner_v, "aval", None)
-                        if (outer_aval is not None and inner_aval is not None
-                                and tuple(getattr(outer_aval, "shape", ()))
-                                == tuple(getattr(inner_aval, "shape", ()))):
+                        if (
+                            outer_aval is not None
+                            and inner_aval is not None
+                            and tuple(getattr(outer_aval, "shape", ()))
+                            == tuple(getattr(inner_aval, "shape", ()))
+                        ):
                             inner_seed[inner_v] = entry
                 if name == "pjit":
                     in_sh = eqn.params.get("in_shardings", ())
                     for sh, inner_v in zip(in_sh, sub.invars):
                         spec = _spec_of(sh)
                         if spec is not None:
-                            inner_seed.setdefault(inner_v,
-                                                  (spec, "in_shardings"))
+                            inner_seed.setdefault(inner_v, (spec, "in_shardings"))
                 walk(sub, inner_seed)
 
     walk(_as_jaxpr(jaxpr), {})

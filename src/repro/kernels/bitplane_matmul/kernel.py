@@ -92,6 +92,24 @@ def _bitplane_matmul_kernel(min_plane_ref,          # scalar prefetch (Mb, Kb)
         out_ref[...] = acc_ref[...]
 
 
+def bitplane_specs(m: int, k: int, n: int, bits: int,
+                   block_m: int, block_n: int, block_k: int):
+    """Grid + BlockSpecs shared by :func:`bitplane_matmul_kernel` and the
+    static verifier's ``audit_specs()``."""
+    grid = (m // block_m, n // block_n, k // block_k)
+    in_specs = [
+        # index maps receive the scalar-prefetch ref as a trailing arg
+        pl.BlockSpec((block_m, block_k), lambda mi, ni, ki, mp: (mi, ki)),
+        pl.BlockSpec((block_m, block_k), lambda mi, ni, ki, mp: (mi, ki)),
+        pl.BlockSpec((bits, block_k, block_n),
+                     lambda mi, ni, ki, mp: (0, ki, ni)),
+    ]
+    out_specs = pl.BlockSpec((block_m, block_n),
+                             lambda mi, ni, ki, mp: (mi, ni))
+    scratch_shapes = [pltpu.VMEM((block_m, block_n), jnp.int32)]
+    return grid, in_specs, out_specs, scratch_shapes
+
+
 def bitplane_matmul_kernel(exp: jnp.ndarray, sign: jnp.ndarray,
                            planes: jnp.ndarray, min_plane: jnp.ndarray,
                            *, n_bits: int = 4,
@@ -103,23 +121,17 @@ def bitplane_matmul_kernel(exp: jnp.ndarray, sign: jnp.ndarray,
     m, k = exp.shape
     bits, k2, n = planes.shape
     assert k2 == k, (k2, k)
-    grid = (m // block_m, n // block_n, k // block_k)
+    grid, in_specs, out_specs, scratch_shapes = bitplane_specs(
+        m, k, n, bits, block_m, block_n, block_k)
 
     kern = functools.partial(_bitplane_matmul_kernel, bits=bits,
                              n_bits=n_bits, k_blocks=grid[2])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            # index maps receive the scalar-prefetch ref as a trailing arg
-            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki, mp: (mi, ki)),
-            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki, mp: (mi, ki)),
-            pl.BlockSpec((bits, block_k, block_n),
-                         lambda mi, ni, ki, mp: (0, ki, ni)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n),
-                               lambda mi, ni, ki, mp: (mi, ni)),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
         kern,
@@ -129,3 +141,67 @@ def bitplane_matmul_kernel(exp: jnp.ndarray, sign: jnp.ndarray,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(min_plane, exp, sign, planes)
+
+
+# ---------------------------------------------------------------------------
+# static-verifier registration (analysis.kernel_rules)
+# ---------------------------------------------------------------------------
+
+
+def audit_specs():
+    """Registered instantiations for the static kernel verifier.
+
+    Three geometries: the canonical sigma-1.0 activation stream at the
+    default 128 blocks (the traffic-model gate), the same stream re-tiled
+    at 64 blocks (VMEM scaling), and a half-pruned stream exercising the
+    fully-skipped ``min_plane == bits`` branch.  The ``min_plane`` skip
+    table is built by the SAME ``ops._skip_table`` the runtime wrapper
+    uses, so static and measured plane traffic share one source of truth.
+    """
+    import numpy as np
+
+    from repro.analysis.pallas_inspect import (KernelInstantiation,
+                                               make_operand, scratch_entry)
+    from repro.kernels.bitplane_matmul.ops import (_skip_table,
+                                                  canonical_logquant)
+
+    n_bits = 4
+    sentinel = -(1 << (n_bits - 1))
+    cases = []
+
+    exp_c, sign_c = canonical_logquant((256, 4096), sigma=1.0, seed=2,
+                                       n_bits=n_bits)
+    cases.append(("canon_s1.b128", exp_c, sign_c, 512, 128, 128, 128))
+    cases.append(("canon_s1.b64", exp_c, sign_c, 512, 64, 64, 64))
+
+    exp_p, sign_p = canonical_logquant((128, 512), sigma=0.25, seed=3,
+                                       n_bits=n_bits)
+    exp_p = np.array(exp_p)
+    exp_p[:, :256] = sentinel              # half the K range fully pruned
+    cases.append(("pruned_half.b128", exp_p, sign_p, 256, 128, 128, 128))
+
+    out = []
+    for name, exp, sign, n, bm, bn, bk in cases:
+        m, k = exp.shape
+        table = np.asarray(_skip_table(jnp.asarray(exp, jnp.int8), bm, bk,
+                                       n_bits, WEIGHT_BITS))
+        grid, in_specs, out_specs, scratch = bitplane_specs(
+            m, k, n, WEIGHT_BITS, bm, bn, bk)
+        inputs = (
+            make_operand("exp", (m, k), jnp.int8, in_specs[0]),
+            make_operand("sign", (m, k), jnp.int8, in_specs[1]),
+            make_operand("planes", (WEIGHT_BITS, k, n), jnp.uint8,
+                         in_specs[2]),
+        )
+        outputs = (
+            make_operand("out", (m, n), jnp.int32, out_specs),
+        )
+        out.append(KernelInstantiation(
+            kernel="bitplane_matmul", case=name, grid=grid,
+            inputs=inputs, outputs=outputs,
+            scratch=tuple(scratch_entry(s) for s in scratch),
+            scalars=(table,),
+            meta=dict(exp=np.asarray(exp), n_bits=n_bits, bits=WEIGHT_BITS,
+                      block_m=bm, block_k=bk, min_plane=table),
+        ))
+    return out

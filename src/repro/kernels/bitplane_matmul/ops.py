@@ -61,6 +61,22 @@ def bitplane_matmul_pallas(exp: jnp.ndarray, sign: jnp.ndarray,
     return out[:m, :n]
 
 
+def canonical_logquant(shape, sigma: float = 1.0, seed: int = 2,
+                       n_bits: int = 4):
+    """Deterministic (exp, sign) int8 stream for benches and the static
+    kernel audit: N(0, sigma) activations from a fixed numpy generator,
+    pushed through the paper's log2 quantizer.  Returned as numpy arrays
+    so audit instantiations carry concrete scalar operands."""
+    import numpy as np
+
+    from repro.core.logquant import log2_quantize
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, sigma, shape).astype(np.float32)
+    q = log2_quantize(jnp.asarray(x), n_bits=n_bits)
+    return np.asarray(q.exp, np.int8), np.asarray(q.sign, np.int8)
+
+
 def plane_traffic_counts(exp: jnp.ndarray, n_bits: int = 4,
                          block_m: int = 128, block_k: int = 128,
                          bits: int = WEIGHT_BITS):

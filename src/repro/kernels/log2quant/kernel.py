@@ -47,13 +47,21 @@ def _log2quant_kernel(x_ref, exp_ref, sign_ref, *, n_bits: int):
     sign_ref[...] = jnp.where(x < 0, jnp.int8(-1), jnp.int8(1))
 
 
+def log2quant_specs(m: int, n: int, block_m: int, block_n: int):
+    """Grid + BlockSpec shared by :func:`log2_quantize_kernel` and the
+    static verifier's ``audit_specs()`` (one spec serves input and both
+    outputs — the quantizer is a pure elementwise map)."""
+    grid = (m // block_m, n // block_n)
+    spec = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+    return grid, spec
+
+
 def log2_quantize_kernel(x: jnp.ndarray, *, n_bits: int = 4,
                          block_m: int = 256, block_n: int = 512,
                          interpret: bool = False):
     """x: f32/bf16 ``(M, N)`` (pre-padded to block multiples) -> (exp, sign)."""
     m, n = x.shape
-    grid = (m // block_m, n // block_n)
-    spec = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+    grid, spec = log2quant_specs(m, n, block_m, block_n)
     return pl.pallas_call(
         functools.partial(_log2quant_kernel, n_bits=n_bits),
         grid=grid,
@@ -65,3 +73,38 @@ def log2_quantize_kernel(x: jnp.ndarray, *, n_bits: int = 4,
         ],
         interpret=interpret,
     )(x)
+
+
+# ---------------------------------------------------------------------------
+# static-verifier registration (analysis.kernel_rules)
+# ---------------------------------------------------------------------------
+
+
+def audit_specs():
+    """Registered instantiations for the static kernel verifier: the
+    default decode-path tiling in f32 and bf16, plus a single-block edge
+    case.  No scalar prefetch, no scratch — the audit mostly proves the
+    tiling divides and prices the VMEM/HBM footprint."""
+    from repro.analysis.pallas_inspect import (KernelInstantiation,
+                                               make_operand)
+
+    cases = [
+        ("decode_f32.b256x512", 512, 1024, 256, 512, jnp.float32),
+        ("decode_bf16.b256x512", 1024, 512, 256, 512, jnp.bfloat16),
+        ("single_block.b128x128", 128, 128, 128, 128, jnp.float32),
+    ]
+    out = []
+    for name, m, n, bm, bn, dtype in cases:
+        grid, spec = log2quant_specs(m, n, bm, bn)
+        out.append(KernelInstantiation(
+            kernel="log2quant", case=name, grid=grid,
+            inputs=(make_operand("x", (m, n), dtype, spec),),
+            outputs=(
+                make_operand("exp", (m, n), jnp.int8, spec),
+                make_operand("sign", (m, n), jnp.int8, spec),
+            ),
+            scratch=(),
+            scalars=(),
+            meta={},
+        ))
+    return out

@@ -63,6 +63,54 @@ NEG_INF = -1e30
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
 
+# The long-context ragged decode tick used by BOTH the paged_attn kernel
+# microbench (benchmarks/kernel_bench.py) and the static kernel verifier
+# (analysis.kernel_rules) — one geometry, one gather_saved_frac number,
+# EXACT-gated in benchmarks/baselines/{paged_attn,kernel_audit}.json.
+RAGGED512 = dict(b=4, page_len=16, nb=32, g=2, r=2, d=16,
+                 lengths=(512, 300, 64, 17))
+
+
+def paged_attn_specs(b: int, g: int, r: int, d: int, page_len: int,
+                     nb: int, splits: int):
+    """Grid + BlockSpecs + scratch of one kernel instantiation.
+
+    ONE source of truth: :func:`paged_attention_kernel` assembles its
+    ``PrefetchScalarGridSpec`` from exactly this, and each ``audit_specs``
+    instantiation hands the same objects to the static verifier
+    (``analysis.pallas_inspect``) — so the index maps the verifier proves
+    in-bounds are the index maps the kernel ships, not a re-statement.
+    """
+    assert nb % splits == 0, (nb, splits)
+    bps = nb // splits
+    grid = (b, g, splits, bps)
+    in_specs = [
+        pl.BlockSpec((1, 1, r, d),
+                     lambda bi, gi, si, ji, tab, lens: (bi, gi, 0, 0)),
+        # the table walk: block index maps dereference the prefetched
+        # page table — page (tab[b, split*bps + j]) streams in, nothing
+        # else; the dense gather never happens
+        pl.BlockSpec((1, page_len, 1, d),
+                     lambda bi, gi, si, ji, tab, lens:
+                     (tab[bi, si * bps + ji], 0, gi, 0)),
+        pl.BlockSpec((1, page_len, 1, d),
+                     lambda bi, gi, si, ji, tab, lens:
+                     (tab[bi, si * bps + ji], 0, gi, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, r, d),
+                     lambda bi, gi, si, ji, tab, lens:
+                     (bi, gi, si, 0, 0)),
+        pl.BlockSpec((1, 1, 1, r),
+                     lambda bi, gi, si, ji, tab, lens: (bi, gi, si, 0)),
+        pl.BlockSpec((1, 1, 1, r),
+                     lambda bi, gi, si, ji, tab, lens: (bi, gi, si, 0)),
+    ]
+    scratch_shapes = [pltpu.VMEM((r, 1), jnp.float32),
+                      pltpu.VMEM((r, 1), jnp.float32),
+                      pltpu.VMEM((r, d), jnp.float32)]
+    return grid, in_specs, out_specs, scratch_shapes, bps
+
 
 def _paged_attn_kernel(table_ref, lens_ref,      # scalar prefetch
                        q_ref,                    # (1, 1, R, D)
@@ -123,39 +171,16 @@ def paged_attention_kernel(qg: jnp.ndarray, k_pool: jnp.ndarray,
     b, g, r, d = qg.shape
     page_len = k_pool.shape[1]
     nb = page_table.shape[1]
-    assert nb % splits == 0, (nb, splits)
-    bps = nb // splits
-    grid = (b, g, splits, bps)
+    grid, in_specs, out_specs, scratch_shapes, bps = paged_attn_specs(
+        b, g, r, d, page_len, nb, splits)
 
     kern = functools.partial(_paged_attn_kernel, page_len=page_len, bps=bps)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, r, d),
-                         lambda bi, gi, si, ji, tab, lens: (bi, gi, 0, 0)),
-            # the table walk: block index maps dereference the prefetched
-            # page table — page (tab[b, split*bps + j]) streams in, nothing
-            # else; the dense gather never happens
-            pl.BlockSpec((1, page_len, 1, d),
-                         lambda bi, gi, si, ji, tab, lens:
-                         (tab[bi, si * bps + ji], 0, gi, 0)),
-            pl.BlockSpec((1, page_len, 1, d),
-                         lambda bi, gi, si, ji, tab, lens:
-                         (tab[bi, si * bps + ji], 0, gi, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, 1, r, d),
-                         lambda bi, gi, si, ji, tab, lens:
-                         (bi, gi, si, 0, 0)),
-            pl.BlockSpec((1, 1, 1, r),
-                         lambda bi, gi, si, ji, tab, lens: (bi, gi, si, 0)),
-            pl.BlockSpec((1, 1, 1, r),
-                         lambda bi, gi, si, ji, tab, lens: (bi, gi, si, 0)),
-        ],
-        scratch_shapes=[pltpu.VMEM((r, 1), jnp.float32),
-                        pltpu.VMEM((r, 1), jnp.float32),
-                        pltpu.VMEM((r, d), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
     )
     return pl.pallas_call(
         kern,
@@ -168,3 +193,89 @@ def paged_attention_kernel(qg: jnp.ndarray, k_pool: jnp.ndarray,
                                  "arbitrary")),
         interpret=interpret,
     )(page_table, lengths, qg, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# static-verifier registration (analysis.kernel_rules)
+# ---------------------------------------------------------------------------
+
+
+def make_page_table(lengths, nb: int, page_len: int):
+    """The canonical page table of a decode tick: each slot's pages are
+    allocated sequentially from page 1 (page 0 is the PR 5 reserved trash
+    page), columns past ``ceil(length / page_len)`` stay trash.  Shared by
+    the kernel microbench and the audit instantiations so the traffic
+    numbers can't drift apart."""
+    import numpy as np
+
+    lens = np.asarray(lengths, np.int32)
+    table = np.zeros((len(lens), nb), np.int32)
+    nxt = 1
+    for i, ln in enumerate(lens):
+        for j in range(-(-int(ln) // page_len)):
+            table[i, j] = nxt
+            nxt += 1
+    return table
+
+
+def audit_specs():
+    """Registered instantiations for the static kernel verifier.
+
+    Enumerates the audit matrix — the ragged512 bench geometry (the
+    gather_saved_frac gate), the serve-smoke geometry the scheduler's tick
+    actually compiles (page_len 4, the distinctive 34-page pool), and a
+    GQA edge case — across splits and pool dtypes.  Each instantiation
+    hands the verifier the SAME BlockSpecs :func:`paged_attn_specs` gives
+    ``pallas_call``, plus the concrete scalar-prefetch operands (table,
+    lengths) the index maps dereference.
+    """
+    import numpy as np
+
+    from repro.analysis.pallas_inspect import (KernelInstantiation,
+                                               make_operand, scratch_entry)
+
+    cases = [
+        # (case name, geometry, splits, pool/q dtype, n_pages)
+        ("ragged512.s1", RAGGED512, 1, jnp.float32, None),
+        ("ragged512.s4", RAGGED512, 4, jnp.float32, None),
+        ("serve_smoke.s1",
+         dict(b=4, page_len=4, nb=8, g=1, r=3, d=16,
+              lengths=(0, 1, 31, 32)), 1, jnp.float32, 34),
+        ("serve_smoke.s2",
+         dict(b=4, page_len=4, nb=8, g=1, r=3, d=16,
+              lengths=(32, 5, 3, 9)), 2, jnp.bfloat16, 34),
+        ("gqa_edge.s2",
+         dict(b=2, page_len=8, nb=4, g=3, r=4, d=8,
+              lengths=(7, 32)), 2, jnp.bfloat16, None),
+    ]
+    out = []
+    for name, geo, splits, dtype, n_pages in cases:
+        b, pl_, nb = geo["b"], geo["page_len"], geo["nb"]
+        g, r, d = geo["g"], geo["r"], geo["d"]
+        lens = np.asarray(geo["lengths"], np.int32)
+        if n_pages is None:
+            n_pages = 1 + b * nb
+        table = make_page_table(lens, nb, pl_)
+        grid, in_specs, out_specs, scratch, bps = paged_attn_specs(
+            b, g, r, d, pl_, nb, splits)
+        pool_shape = (n_pages, pl_, g, d)
+        inputs = (
+            make_operand("q", (b, g, r, d), dtype, in_specs[0]),
+            make_operand("k_pool", pool_shape, dtype, in_specs[1]),
+            make_operand("v_pool", pool_shape, dtype, in_specs[2]),
+        )
+        outputs = (
+            make_operand("o", (b, g, splits, r, d), jnp.float32,
+                         out_specs[0]),
+            make_operand("m", (b, g, splits, r), jnp.float32, out_specs[1]),
+            make_operand("l", (b, g, splits, r), jnp.float32, out_specs[2]),
+        )
+        out.append(KernelInstantiation(
+            kernel="paged_attention", case=name, grid=grid,
+            inputs=inputs, outputs=outputs,
+            scratch=tuple(scratch_entry(s) for s in scratch),
+            scalars=(table, lens),
+            meta=dict(page_len=pl_, bps=bps, splits=splits, n_pages=n_pages,
+                      trash_page=0, table=table, lengths=lens),
+        ))
+    return out

@@ -1,7 +1,8 @@
 """NDP accelerator simulator: Neurocube / NaHiD / QeiHaN (paper §V-§VI)."""
 
 from repro.simulator.config import (ALL_ACCELERATORS, NAHID, NEUROCUBE,
-                                    QEIHAN, AcceleratorConfig, EnergyModel)
+                                    QEIHAN, AcceleratorConfig, EnergyModel,
+                                    load_kernel_cost_table)
 from repro.simulator.engine import LayerResult, SimResult, simulate, simulate_layer
 from repro.simulator.stats import (ActStats, gaussian_stats, measure,
                                    paper_preset)

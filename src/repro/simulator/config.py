@@ -97,3 +97,37 @@ QEIHAN = AcceleratorConfig(
 )
 
 ALL_ACCELERATORS = (NEUROCUBE, NAHID, QEIHAN)
+
+
+# ---------------------------------------------------------------------------
+# serving-side cost table (static kernel audit -> simulator input)
+# ---------------------------------------------------------------------------
+
+KERNEL_COST_TABLE_PATH = "benchmarks/baselines/kernel_audit.json"
+
+
+def load_kernel_cost_table(path: str = KERNEL_COST_TABLE_PATH):
+    """Per-tick kernel cost table from the static kernel audit
+    (``tools/audit.py --kernels``): ``{variant: {"tick_bytes_total",
+    "kernels": {family: {"calls", "operand_bytes"}}}}``.
+
+    The counts are compile-time facts (pallas_call census over the traced
+    tick, scan trip counts multiplied through) and the bytes are the dense
+    streaming upper bound per launch — what the energy model charges DRAM
+    for before the paper's savings fractions (plane skip, page walk) are
+    applied.  Raises ``FileNotFoundError`` if the audit baseline has not
+    been generated (``tools/audit.py --kernels --update-baselines``).
+    """
+    import json
+
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for name, rec in doc.get("per_tick", {}).items():
+        out[name] = {
+            "tick_bytes_total": int(rec["tick_bytes_total"]),
+            "kernels": {k: {"calls": int(v["calls"]),
+                            "operand_bytes": int(v["operand_bytes"])}
+                        for k, v in rec["kernels"].items()},
+        }
+    return out

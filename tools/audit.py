@@ -83,11 +83,25 @@ def main(argv=None) -> int:
         action="store_true",
         help="skip the recompile census sweep (rule family 4)",
     )
+    ap.add_argument(
+        "--kernels",
+        action="store_true",
+        help="run the static Pallas kernel verifier (rule family 5: "
+        "index-map bounds, VMEM budgets, tail lints, byte-traffic model)",
+    )
+    ap.add_argument(
+        "--kernel-baselines",
+        default=None,
+        metavar="PATH",
+        help="kernel budget baseline file (default: "
+        "benchmarks/baselines/kernel_audit.json)",
+    )
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
     from repro.analysis import budgets as budgets_mod
-    from repro.analysis.audit import run_audit
+    from repro.analysis import kernel_rules
+    from repro.analysis.audit import ALL_RULES, run_audit
     from repro.analysis.report import apply_waivers, load_waivers
 
     def log(msg):
@@ -97,10 +111,10 @@ def main(argv=None) -> int:
     mesh_specs = [None] + [m for m in args.mesh.split(",") if m]
 
     try:
-        waivers = load_waivers(args.waivers)
+        waivers = load_waivers(args.waivers, known_rules=ALL_RULES)
     except FileNotFoundError:
         waivers = []
-    except ValueError as e:
+    except (KeyError, ValueError) as e:
         print(f"audit: bad waiver file: {e}", file=sys.stderr)
         return 2
 
@@ -108,9 +122,12 @@ def main(argv=None) -> int:
         report = run_audit(
             mesh_specs,
             baseline_path=args.baselines or budgets_mod.BASELINE_PATH,
+            kernel_baseline_path=(args.kernel_baselines
+                                  or kernel_rules.KERNEL_BASELINE_PATH),
             update_baselines=args.update_baselines,
             with_budgets=not args.no_budgets,
             with_recompile=not args.no_recompile,
+            with_kernels=args.kernels,
             log=log,
         )
     except FileNotFoundError as e:
@@ -127,10 +144,12 @@ def main(argv=None) -> int:
         log(f"report -> {args.report}")
 
     n_waived = sum(1 for f in report.findings if f.waived)
+    n_kernel = len(report.kernels.get("kernels", {}))
     print(
         f"audit: {len(report.variants)} variants, "
         f"{report.programs_audited} programs, "
         f"{len(report.budgets)} budgets checked, "
+        f"{n_kernel} kernel instantiations, "
         f"{len(report.findings)} findings "
         f"({n_waived} waived, {len(live)} failing)"
     )

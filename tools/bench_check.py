@@ -46,7 +46,7 @@ DEFAULT_BASELINE_DIR = os.path.join(
 
 EXACT = re.compile(
     r"(bit_equal|served_frac|hit_rate|lookup_hits|saved_frac"
-    r"|registered_groups)"
+    r"|registered_groups|vmem_bytes|static_bytes)"
 )
 TIGHT = re.compile(r"(plane_traffic|element_traffic)")
 TIGHT_RTOL = 0.02
