@@ -66,6 +66,7 @@ TICK_BYTES_RTOL = 0.10
 # -> audit family; the per-tick census keys sites by this
 KERNEL_FN_FAMILY = {
     "_paged_attn_kernel": "paged_attention",
+    "_paged_attn_quant_kernel": "paged_attention",
     "_bitplane_matmul_kernel": "bitplane_matmul",
     "_log2quant_kernel": "log2quant",
 }
@@ -196,7 +197,7 @@ def _traffic_paged(inst: KernelInstantiation) -> Tuple[Dict, List[Finding]]:
     g = inst.inputs[0].shape[1]
 
     def live(name: str, gidx: Tuple[int, ...]) -> bool:
-        if name not in ("k_pool", "v_pool"):
+        if name not in ("k_pool", "v_pool", "k_scale", "v_scale"):
             return True
         bi, _, si, ji = gidx
         return si * bps + ji < -(-int(lens[bi]) // page_len)
@@ -241,6 +242,17 @@ def _traffic_paged(inst: KernelInstantiation) -> Tuple[Dict, List[Finding]]:
         "fetches": {k: int(v) for k, v in sorted(tr["fetches"].items())},
         "gather_saved_frac": saved_frac,
     }
+    if "k_scale" in tr["fetches"]:
+        # quantized pool: page bytes actually streamed (packed codes +
+        # per-page scales) vs the same page walk over a dense f32 pool —
+        # the compressed-page traffic saving, as a gated exact number.
+        kp = next(op for op in inst.inputs if op.name == "k_pool")
+        itemsize = np.dtype(kp.dtype).itemsize
+        q_bytes = sum(tr["read"][n]
+                      for n in ("k_pool", "v_pool", "k_scale", "v_scale"))
+        dense_bytes = (tr["read"]["k_pool"] + tr["read"]["v_pool"]) * (
+            4.0 / itemsize)
+        record["page_read_saved_frac"] = 1.0 - q_bytes / dense_bytes
     return record, findings
 
 

@@ -3,10 +3,12 @@
 from repro.core.access_model import AccessReport, needed_bits, weight_access_report
 from repro.core.bitplane import (from_bitplanes, pack_planes, plane_coefficients,
                                  to_bitplanes, unpack_planes)
-from repro.core.logquant import (LogQuantized, log2_dequantize, log2_quantize,
-                                 log2_quantize_naive, negative_fraction,
-                                 pack_codes, pruned_fraction, unpack_codes,
-                                 zero_sentinel)
+from repro.core.logquant import (LogQuantized, code_dtype,
+                                 dequantize_page_codes, log2_dequantize,
+                                 log2_quantize, log2_quantize_naive,
+                                 negative_fraction, pack_codes,
+                                 pruned_fraction, quantize_page_codes,
+                                 scale_exponent, unpack_codes, zero_sentinel)
 from repro.core.shiftadd import (QuantCtx, QuantizedLinearParams,
                                  as_quant_ctx, calibrate_act_scale,
                                  quantized_linear_apply, quantized_linear_init,

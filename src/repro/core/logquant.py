@@ -42,11 +42,15 @@ import numpy as np
 __all__ = [
     "LogQuantized",
     "zero_sentinel",
+    "code_dtype",
     "log2_quantize",
     "log2_quantize_naive",
     "log2_dequantize",
     "pack_codes",
     "unpack_codes",
+    "scale_exponent",
+    "quantize_page_codes",
+    "dequantize_page_codes",
     "negative_fraction",
     "pruned_fraction",
 ]
@@ -65,8 +69,17 @@ class LogQuantized(NamedTuple):
     sign: jnp.ndarray  # int8 in {-1, +1}
 
     @property
-    def n_bits(self) -> None:  # pragma: no cover - informational only
-        raise AttributeError("n_bits is not stored; pass it explicitly")
+    def n_bits(self) -> int:
+        """Smallest encoding width whose exponent range (including the zero
+        sentinel ``-(2^(n-1))``) holds every stored exponent."""
+        if self.exp.size == 0:
+            return 2
+        lo = int(jnp.min(self.exp))
+        hi = int(jnp.max(self.exp))
+        n = 2
+        while -(1 << (n - 1)) > lo or (1 << (n - 1)) - 1 < hi:
+            n += 1
+        return n
 
 
 def zero_sentinel(n_bits: int = 4) -> int:
@@ -140,20 +153,82 @@ def log2_dequantize(q: LogQuantized, n_bits: int = 4,
     return jnp.where(q.exp == sentinel, 0.0, val).astype(dtype)
 
 
-def pack_codes(q: LogQuantized, n_bits: int = 4) -> jnp.ndarray:
-    """Pack (exp, sign) into a single int8 code: ``code = exp*2 + (sign<0)``.
+def code_dtype(n_bits: int = 4):
+    """Container dtype of the packed wire code.
 
-    This is the 5-bit (4-bit exponent + sign) wire format the PE sends to the
-    D&S unit; used by the access model to count activation traffic.
+    ``code = exp*2 + sign`` needs ``n_bits + 1`` bits, so int8 holds every
+    width up to 7 exponent bits; the 8-bit encoding (exp in [-128, 127])
+    widens to int16.
     """
-    neg = (q.sign < 0).astype(jnp.int8)
-    return (q.exp.astype(jnp.int8) << 1) | neg
+    return jnp.int16 if n_bits >= 8 else jnp.int8
+
+
+def pack_codes(q: LogQuantized, n_bits: int = 4) -> jnp.ndarray:
+    """Pack (exp, sign) into a single code: ``code = exp*2 + (sign<0)``.
+
+    This is the (n_bits+1)-bit (exponent + sign) wire format the PE sends to
+    the D&S unit; used by the access model to count activation traffic.
+    """
+    ct = code_dtype(n_bits)
+    neg = (q.sign < 0).astype(ct)
+    return (q.exp.astype(ct) << 1) | neg
 
 
 def unpack_codes(codes: jnp.ndarray, n_bits: int = 4) -> LogQuantized:
+    # arithmetic shift keeps the exponent's sign; every width's exponent
+    # range fits int8 (the widest, n_bits=8, spans [-128, 127])
     exp = (codes >> 1).astype(jnp.int8)
     sign = jnp.where((codes & 1) != 0, jnp.int8(-1), jnp.int8(1))
     return LogQuantized(exp=exp, sign=sign)
+
+
+def scale_exponent(x: jnp.ndarray, axis=-1, keepdims: bool = False
+                   ) -> jnp.ndarray:
+    """Power-of-two row scale: ``floor(log2(max|x|))`` over ``axis`` (int32).
+
+    Zero/subnormal rows scale by 2^0.  A power-of-two scale makes the
+    scaled quantize *idempotent*: ``x / 2^se`` of an already-dequantized
+    value is again an exact power of two, whose mantissa field is 0 — below
+    the sqrt(2) comparator threshold — so requantizing under the same scale
+    reproduces the codes bit-for-bit (the quantized KV pool's rewrite
+    invariant, DESIGN.md §Quantized KV pages).
+    """
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=keepdims)
+    exp_field, _ = _exp_mantissa_fields(m)
+    return jnp.where(exp_field == 0, 0, exp_field - 127)
+
+
+def quantize_page_codes(x: jnp.ndarray, scale_exp: jnp.ndarray,
+                        n_bits: int = 4) -> jnp.ndarray:
+    """LOG2-quantize ``x / 2^scale_exp`` and pack to wire codes.
+
+    ``scale_exp`` (int32) broadcasts against ``x``; scaling by an exact
+    power of two never perturbs the mantissa, so the comparator rounding is
+    applied to the true scaled magnitudes.  Pruned values get the canonical
+    positive-sign sentinel code — they decode to +0.0, and requantizing
+    +0.0 must reproduce the same byte (the rewrite invariant).
+    """
+    scaled = x.astype(jnp.float32) * jnp.exp2(-scale_exp.astype(jnp.float32))
+    q = log2_quantize(scaled, n_bits)
+    sign = jnp.where(q.exp == zero_sentinel(n_bits), jnp.int8(1), q.sign)
+    return pack_codes(LogQuantized(exp=q.exp, sign=sign), n_bits)
+
+
+def dequantize_page_codes(codes: jnp.ndarray, scale_exp: jnp.ndarray,
+                          n_bits: int = 4,
+                          dtype: jnp.dtype = jnp.float32) -> jnp.ndarray:
+    """``sign * 2^(exp + scale_exp)`` with the sentinel decoding to 0.
+
+    The summed exponent is clamped to the f32 normal range so garbage
+    scales (trash-page contents) decode to large-but-finite values —
+    downstream masking then erases them without Inf/NaN contamination.
+    """
+    q = unpack_codes(codes, n_bits)
+    sentinel = zero_sentinel(n_bits)
+    e = jnp.clip(q.exp.astype(jnp.int32) + scale_exp.astype(jnp.int32),
+                 -126, 127)
+    val = q.sign.astype(jnp.float32) * jnp.exp2(e.astype(jnp.float32))
+    return jnp.where(q.exp == sentinel, 0.0, val).astype(dtype)
 
 
 def negative_fraction(q: LogQuantized, n_bits: int = 4) -> jnp.ndarray:

@@ -112,6 +112,40 @@ def paged_attn_specs(b: int, g: int, r: int, d: int, page_len: int,
     return grid, in_specs, out_specs, scratch_shapes, bps
 
 
+def paged_attn_quant_specs(b: int, g: int, r: int, d: int, page_len: int,
+                           nb: int, splits: int):
+    """Quantized-pool variant of :func:`paged_attn_specs`.
+
+    Same grid/out/scratch; the K/V operands are packed log2 code pools
+    (same (P, page_len, G, D) geometry, int8/int16 elements — the §IV
+    traffic saving is the dtype shrink on exactly these block loads) plus
+    one (P, G) int32 scale-exponent pool each, block (1, 1) dereferenced
+    through the same page-table walk.
+    """
+    grid, in_specs, out_specs, scratch_shapes, bps = paged_attn_specs(
+        b, g, r, d, page_len, nb, splits)
+    scale_spec = pl.BlockSpec(
+        (1, 1),
+        lambda bi, gi, si, ji, tab, lens: (tab[bi, si * bps + ji], gi))
+    in_specs = [in_specs[0], in_specs[1], scale_spec, in_specs[2],
+                scale_spec]
+    return grid, in_specs, out_specs, scratch_shapes, bps
+
+
+def _dequant_block(codes, se, n_bits: int):
+    """In-kernel log2 dequant of one page block: ``sign * 2^(exp + se)``
+    with the zero sentinel -> 0.  The summed exponent clamps to the f32
+    normal range so garbage codes/scales (trash-page contents) decode to
+    large-but-finite values the position mask then erases — never Inf/NaN
+    (mirrors ``core.logquant.dequantize_page_codes``)."""
+    sentinel = -(1 << (n_bits - 1))
+    e = (codes >> 1).astype(jnp.int32)
+    ee = jnp.clip(e + se, -126, 127)
+    mag = jnp.exp2(ee.astype(jnp.float32))
+    val = jnp.where((codes & 1) != 0, -mag, mag)
+    return jnp.where(e == sentinel, 0.0, val)
+
+
 def _paged_attn_kernel(table_ref, lens_ref,      # scalar prefetch
                        q_ref,                    # (1, 1, R, D)
                        k_ref, v_ref,             # (1, page_len, 1, D)
@@ -193,6 +227,102 @@ def paged_attention_kernel(qg: jnp.ndarray, k_pool: jnp.ndarray,
                                  "arbitrary")),
         interpret=interpret,
     )(page_table, lengths, qg, k_pool, v_pool)
+
+
+def _paged_attn_quant_kernel(table_ref, lens_ref,  # scalar prefetch
+                             q_ref,                # (1, 1, R, D)
+                             k_ref, ks_ref,        # (1, page_len, 1, D) codes
+                             v_ref, vs_ref,        # + (1, 1) int32 scale
+                             o_ref, m_ref, l_ref,
+                             m_s, l_s, acc_s,
+                             *, page_len: int, bps: int, n_bits: int):
+    """Quantized-pool body: identical online-softmax walk to
+    :func:`_paged_attn_kernel`, but each page block streams in as packed
+    log2 codes + one scale exponent and dequantizes in-register — the
+    wire format never round-trips through a dense pool.  The caller masks
+    to *full* pages only (``lengths`` floored to a page multiple); the
+    newest partial page merges as one extra dense-tail split outside
+    (``ops.paged_decode_attention_quant``)."""
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0]                               # (R, D)
+    k = _dequant_block(k_ref[0, :, 0, :], ks_ref[0, 0], n_bits)
+    v = _dequant_block(v_ref[0, :, 0, :], vs_ref[0, 0], n_bits)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(q.shape[-1]))    # (R, page_len)
+    base = (si * bps + j) * page_len
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, page_len), 1)
+    s = jnp.where(pos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_s[...]                             # (R, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    # all-masked-so-far blocks keep m_new = NEG_INF, so masked p would be
+    # exp(0) = 1 against dequantized garbage of magnitude up to 2^127 —
+    # large enough for the junk accumulator to overflow to inf and turn
+    # the merge's zero weight into 0 * inf = NaN.  Zero the masked p
+    # explicitly: bitwise no-op for any block holding a valid token
+    # (there masked p already underflowed to exact 0.0)
+    p = jnp.where(pos < lens_ref[b], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_s[...] = acc_s[...] * corr + pv
+    m_s[...] = m_new
+
+    @pl.when(j == bps - 1)
+    def _flush():
+        o_ref[0, 0, 0] = acc_s[...]
+        m_ref[0, 0, 0] = m_s[..., 0]
+        l_ref[0, 0, 0] = l_s[..., 0]
+
+
+def paged_attention_quant_kernel(qg: jnp.ndarray, k_codes: jnp.ndarray,
+                                 k_scale: jnp.ndarray, v_codes: jnp.ndarray,
+                                 v_scale: jnp.ndarray,
+                                 page_table: jnp.ndarray,
+                                 lengths: jnp.ndarray, *, n_bits: int = 4,
+                                 splits: int = 1, interpret: bool = False):
+    """qg (B, G, R, D); code pools (P, page_len, G, D) packed log2 codes;
+    scale pools (P, G) int32; ``lengths`` must already be floored to full
+    pages (the dense tail merges outside).  Returns partial ``(o, m, l)``
+    like :func:`paged_attention_kernel`."""
+    b, g, r, d = qg.shape
+    page_len = k_codes.shape[1]
+    nb = page_table.shape[1]
+    grid, in_specs, out_specs, scratch_shapes, bps = paged_attn_quant_specs(
+        b, g, r, d, page_len, nb, splits)
+
+    kern = functools.partial(_paged_attn_quant_kernel, page_len=page_len,
+                             bps=bps, n_bits=n_bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, g, splits, r, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, g, splits, r), jnp.float32),
+                   jax.ShapeDtypeStruct((b, g, splits, r), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(page_table, lengths, qg, k_codes, k_scale, v_codes, v_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -277,5 +407,57 @@ def audit_specs():
             scalars=(table, lens),
             meta=dict(page_len=pl_, bps=bps, splits=splits, n_pages=n_pages,
                       trash_page=0, table=table, lengths=lens),
+        ))
+
+    # quantized-pool variants (ServeScheduler kv_quant=True): same table
+    # walk, but the K/V operands are packed log2 code pools + (P, G) scale
+    # pools — the audit's byte model makes the compressed-page traffic
+    # saving a gated number (page_read_saved_frac).  The kernel is masked
+    # to full pages (lengths floored; the dense tail merges outside), but
+    # the allocated tail page still streams, so liveness/table rules use
+    # the ORIGINAL lengths.
+    from repro.core.logquant import code_dtype
+    quant_cases = [
+        ("ragged512.q4.s2", RAGGED512, 2, 4, None),
+        ("serve_smoke.q4.s1",
+         dict(b=4, page_len=4, nb=8, g=1, r=3, d=16,
+              lengths=(0, 1, 31, 32)), 1, 4, 34),
+        ("gqa_edge.q8.s2",
+         dict(b=2, page_len=8, nb=4, g=3, r=4, d=8,
+              lengths=(7, 32)), 2, 8, None),
+    ]
+    for name, geo, splits, kv_bits, n_pages in quant_cases:
+        b, pl_, nb = geo["b"], geo["page_len"], geo["nb"]
+        g, r, d = geo["g"], geo["r"], geo["d"]
+        lens = np.asarray(geo["lengths"], np.int32)
+        if n_pages is None:
+            n_pages = 1 + b * nb
+        table = make_page_table(lens, nb, pl_)
+        kern_lens = (np.maximum(lens - 1, 0) // pl_ * pl_).astype(np.int32)
+        grid, in_specs, out_specs, scratch, bps = paged_attn_quant_specs(
+            b, g, r, d, pl_, nb, splits)
+        ct = code_dtype(kv_bits)
+        pool_shape = (n_pages, pl_, g, d)
+        inputs = (
+            make_operand("q", (b, g, r, d), jnp.float32, in_specs[0]),
+            make_operand("k_pool", pool_shape, ct, in_specs[1]),
+            make_operand("k_scale", (n_pages, g), jnp.int32, in_specs[2]),
+            make_operand("v_pool", pool_shape, ct, in_specs[3]),
+            make_operand("v_scale", (n_pages, g), jnp.int32, in_specs[4]),
+        )
+        outputs = (
+            make_operand("o", (b, g, splits, r, d), jnp.float32,
+                         out_specs[0]),
+            make_operand("m", (b, g, splits, r), jnp.float32, out_specs[1]),
+            make_operand("l", (b, g, splits, r), jnp.float32, out_specs[2]),
+        )
+        out.append(KernelInstantiation(
+            kernel="paged_attention", case=name, grid=grid,
+            inputs=inputs, outputs=outputs,
+            scratch=tuple(scratch_entry(s) for s in scratch),
+            scalars=(table, kern_lens),
+            meta=dict(page_len=pl_, bps=bps, splits=splits, n_pages=n_pages,
+                      trash_page=0, table=table, lengths=lens,
+                      kv_bits=kv_bits),
         ))
     return out

@@ -17,7 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.kernel import (NEG_INF,
+                                                  paged_attention_kernel,
+                                                  paged_attention_quant_kernel)
 from repro.models.sharding import shard
 
 
@@ -80,6 +82,77 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     o = shard(o, "kvsplit")
     m = shard(m, "kvsplit_stat")
     l = shard(l, "kvsplit_stat")
+    out = merge_split_softmax(m, l, o, axis=2)           # (B, G, R, D)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "splits", "interpret"))
+def paged_decode_attention_quant(q: jnp.ndarray, k_codes: jnp.ndarray,
+                                 k_scale: jnp.ndarray, v_codes: jnp.ndarray,
+                                 v_scale: jnp.ndarray, k_tail: jnp.ndarray,
+                                 v_tail: jnp.ndarray, page_table: jnp.ndarray,
+                                 lengths: jnp.ndarray, *, n_bits: int = 4,
+                                 splits: int = 1,
+                                 interpret: bool | None = None) -> jnp.ndarray:
+    """Decode attention off the log2-quantized page pool.
+
+    q (B, 1, H, D); code pools (P, page_len, G, D) packed wire codes;
+    scale pools (P, G) int32; tail rings (B, 2*page_len + 1, G, D) dense
+    cache-dtype (row 2*page_len = junk bin); page_table (B, NB) int32;
+    lengths (B,) int32.  The kernel walks *full* pages only (lengths
+    floored to a page multiple — the newest partial page's codes are
+    still being rewritten every tick); the partial page is computed here
+    as one extra dense flash-decode split over the tail ring and merged
+    through the same :func:`merge_split_softmax`, so its tokens read
+    exactly the bytes the dense pool would hold.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, _, h, d = q.shape
+    page_len = k_codes.shape[1]
+    g = k_codes.shape[2]
+    nb = page_table.shape[1]
+    pad = (-nb) % splits
+    if pad:
+        page_table = jnp.pad(page_table, ((0, 0), (0, pad)))
+    qg = q.reshape(b, 1, g, h // g, d)[:, 0]             # (B, G, R, D)
+    lengths = lengths.astype(jnp.int32)
+    tb = jnp.maximum(lengths - 1, 0) // page_len         # tail-page block
+    kern_lens = tb * page_len                            # full pages only
+    o, m, l = paged_attention_quant_kernel(qg, k_codes, k_scale, v_codes,
+                                           v_scale,
+                                           page_table.astype(jnp.int32),
+                                           kern_lens, n_bits=n_bits,
+                                           splits=splits, interpret=interpret)
+    o = shard(o, "kvsplit")
+    m = shard(m, "kvsplit_stat")
+    l = shard(l, "kvsplit_stat")
+
+    # the tail-page partial: ring half (tb % 2) * page_len holds positions
+    # [tb*page_len, (tb+1)*page_len) — a flash-decode block over dense rows
+    half = (tb % 2) * page_len
+    j = jnp.arange(page_len, dtype=jnp.int32)
+    idx = (half[:, None] + j[None, :])[:, :, None, None]
+    kt = jnp.take_along_axis(k_tail, idx, axis=1)        # (B, pl, G, D)
+    vt = jnp.take_along_axis(v_tail, idx, axis=1)
+    pos = tb[:, None] * page_len + j[None, :]            # (B, pl) absolute
+    s_t = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(jnp.float32),
+                     kt.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    s_t = jnp.where(pos[:, None, None, :] < lengths[:, None, None, None],
+                    s_t, NEG_INF)
+    m_t = jnp.max(s_t, axis=-1, keepdims=True)           # (B, G, R, 1)
+    # p casts to the cache dtype before PV, mirroring the dense decode
+    # path — the tail tokens must read exactly like the dense pool's
+    p = jnp.exp(s_t - m_t)
+    l_t = jnp.sum(p, axis=-1)                            # (B, G, R)
+    acc_t = jnp.einsum("bgrk,bkgd->bgrd", p.astype(vt.dtype), vt,
+                       preferred_element_type=jnp.float32)
+
+    # append the tail as one extra split: kernel partials are UNNORMALIZED
+    # accumulators, so the tail block composes through the same merge
+    o = jnp.concatenate([o, acc_t[:, :, None]], axis=2)
+    m = jnp.concatenate([m, m_t[..., 0][:, :, None]], axis=2)
+    l = jnp.concatenate([l, l_t[:, :, None]], axis=2)
     out = merge_split_softmax(m, l, o, axis=2)           # (B, G, R, D)
     return out.reshape(b, 1, h, d).astype(q.dtype)
 

@@ -73,7 +73,8 @@ def _serve_continuous(cfg, params, args, mesh):
     quantum = 1
     if chunked != "off" or args.prefix_cache:
         quantum = chunk_len
-    if args.paged or args.prefix_cache or args.attn_kernel:
+    kv_quant = args.kv_quant is not None
+    if args.paged or args.prefix_cache or args.attn_kernel or kv_quant:
         quantum = math.lcm(quantum, args.page_len)
     if quantum > 1:
         pool = round_pool_len(pool, quantum)
@@ -81,10 +82,12 @@ def _serve_continuous(cfg, params, args, mesh):
         cfg, params, max_slots=args.max_slots, max_len=pool,
         buckets=buckets, quant=quant, with_stats=args.quant,
         tick_steps=args.tick_steps, chunked=chunked, chunk_len=chunk_len,
-        paged=args.paged or args.prefix_cache or args.attn_kernel,
+        paged=(args.paged or args.prefix_cache or args.attn_kernel
+               or kv_quant),
         page_len=args.page_len,
         prefix_cache=args.prefix_cache, attn_kernel=args.attn_kernel,
         attn_splits=args.attn_splits,
+        kv_quant=kv_quant, kv_bits=args.kv_quant or 4,
         mesh=mesh if mesh is not None and mesh.size > 1 else None)
     rng = np.random.default_rng(args.seed)
     # with a prefix cache, draw a shared-system-prompt workload (half the
@@ -110,7 +113,9 @@ def _serve_continuous(cfg, params, args, mesh):
         chunk_tag += (f", paged/{sched.page_len}"
                       + ("+prefix" if sched.prefix_cache else "")
                       + (f"+kernel/s{sched.attn_splits}"
-                         if sched.attn_kernel != "off" else ""))
+                         if sched.attn_kernel != "off" else "")
+                      + (f"+kvq/{sched.kv_bits}b" if sched.kv_quant
+                         else ""))
     print(f"[serve] {cfg.name}: continuous batching ({mesh_tag}{chunk_tag}) "
           f"— {len(results)} requests, {sched.max_slots} slots, "
           f"tick={sched.tick_steps}: "
@@ -207,6 +212,11 @@ def main(argv=None):
                          "into this many independent softmax partials, "
                          "merged at the end (rides the model mesh axis "
                          "when it divides)")
+    ap.add_argument("--kv-quant", nargs="?", const=4, type=int,
+                    default=None, metavar="BITS",
+                    help="log2-quantize completed KV pages at BITS wire "
+                         "exponent bits (default 4; implies --paged — "
+                         "newest pages stay f32 in the per-slot tail ring)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix prefix cache over the paged pool (implies "
                          "--paged): requests re-use the cached KV of their "

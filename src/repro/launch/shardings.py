@@ -213,6 +213,20 @@ def cache_shardings(mesh: Mesh, caches_tree: Any, *, batch: int,
                 return NamedSharding(mesh, P(bax if len(bax) > 1 else bax[0]))
             return NamedSharding(mesh, P())
         entries = [None] * len(shape)
+        if paged and re.search(r"'[kv]_(codes|scale)'", name):
+            # log2-quantized page pool: codes (R, P, page_len, Hkv, D) and
+            # per-page scales (R, P, Hkv) — pages on data, like the dense
+            # pool; a page's codes and its scale land on the same shard so
+            # dequant (codes + scale -> rows) stays local
+            if shape[1] % nb == 0 and nb > 1:
+                entries[1] = bax if len(bax) > 1 else bax[0]
+            return NamedSharding(mesh, P(*entries))
+        if paged and re.search(r"'[kv]_tail'", name):
+            # f32 tail ring (R, B, 2*page_len+1, Hkv, D): per-slot rows,
+            # batch on data like every other per-row cache leaf
+            if shape[1] % nb == 0 and nb > 1:
+                entries[1] = bax if len(bax) > 1 else bax[0]
+            return NamedSharding(mesh, P(*entries))
         if paged and ("'k'" in name or "'v'" in name):
             # page pool (R, P, page_len, Hkv, D): pages on data only
             if shape[1] % nb == 0 and nb > 1:

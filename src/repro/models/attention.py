@@ -254,6 +254,30 @@ class PagedKVCache(NamedTuple):
     length: jnp.ndarray       # (B,) int32 per-slot valid lengths
 
 
+class QuantPagedKVCache(NamedTuple):
+    """Log2-quantized page pool (``ServeScheduler(kv_quant=True)``).
+
+    Pages hold packed ``core.logquant`` wire codes plus a per-(page, head)
+    power-of-two scale exponent; the D&S-unit image of the paper's §IV
+    claim applied to serving state — only ``kv_bits + 1`` bits per cache
+    element move on the streaming path.  The per-slot *tail ring* keeps
+    each slot's newest two pages dense in the cache dtype, so
+    decode-adjacent tokens read exactly what the dense pool would hold
+    (DESIGN.md §Quantized KV pages).  Every write is idempotent: a row's
+    codes are a pure function of (value, its page's first-row scale), so
+    the scheduler's masked junk-write/rewrite pattern reproduces identical
+    bytes.
+    """
+    k_codes: jnp.ndarray      # (P, page_len, G, D) packed codes
+    v_codes: jnp.ndarray
+    k_scale: jnp.ndarray      # (P, G) int32 power-of-two scale exponents
+    v_scale: jnp.ndarray
+    k_tail: jnp.ndarray       # (B, 2*page_len + 1, G, D) dense tail ring
+    v_tail: jnp.ndarray       # (row 2*page_len = junk bin)
+    page_table: jnp.ndarray   # (B, n_blocks) int32 page ids, 0 = trash
+    length: jnp.ndarray       # (B,) int32 per-slot valid lengths
+
+
 def _paged_write(pool: jnp.ndarray, table: jnp.ndarray, new: jnp.ndarray,
                  pos: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
     """Scatter ``new`` (B, S, G, D) token rows into the page pool.
@@ -276,6 +300,97 @@ def _paged_write(pool: jnp.ndarray, table: jnp.ndarray, new: jnp.ndarray,
     flat_off = off.reshape(-1)
     vals = new.reshape((-1,) + new.shape[2:]).astype(pool.dtype)
     return pool.at[flat_page, flat_off].set(vals)
+
+
+def _quant_paged_write(codes: jnp.ndarray, scale: jnp.ndarray,
+                       tail: jnp.ndarray, table: jnp.ndarray,
+                       new: jnp.ndarray, pos: jnp.ndarray, keep: jnp.ndarray,
+                       start: jnp.ndarray, adv, n_bits: int):
+    """Quantize-on-write into the compressed page pool + dense tail ring.
+
+    ``codes (P, page_len, G, D)`` / ``scale (P, G)`` / ``tail (B,
+    2*page_len + 1, G, D)``; ``new (B, S, G, D)`` rows at absolute
+    positions ``pos (B, S)``; ``start (B,)`` is the pre-write length and
+    ``adv`` the per-row advance.  Three scatters, all trash-redirected for
+    masked rows exactly like :func:`_paged_write`:
+
+    * codes — each row quantized under its page's scale.  A page whose
+      first row sits inside this chunk takes its scale from that row; an
+      older page reuses the pool's stored scale.  Appends only ever start
+      a page at its offset-0 row, and the power-of-two scale makes
+      requantization under the same scale lossless, so rewriting the same
+      positions (the scheduler's junk-write pattern) reproduces identical
+      bytes.
+    * scale — only offset-0 rows own their page's scale entry; every other
+      row's scale write is redirected to the trash page's entry.
+    * tail ring — the row is also stored dense at ``pos % (2*page_len)``
+      when it is within the newest two pages; older rows (and masked ones)
+      hit the junk bin.  Two pages of ring mean a later write can only
+      alias a position two pages back — one the overlay no longer reads.
+    """
+    from repro.core.logquant import quantize_page_codes, scale_exponent
+
+    page_len = codes.shape[1]
+    block = jnp.clip(pos // page_len, 0, table.shape[1] - 1)
+    page = jnp.take_along_axis(table, block, axis=1)
+    in_alloc = keep & (pos // page_len < table.shape[1])
+    page = jnp.where(in_alloc, page, 0)
+    off = jnp.where(in_alloc, pos % page_len, 0)
+
+    b = pos.shape[0]
+    startb = jnp.broadcast_to(start, (b,))
+    p0 = pos - pos % page_len                     # each row's page start
+    own = p0 >= startb[:, None]                   # page starts in this chunk
+    j0 = jnp.clip(p0 - startb[:, None], 0, new.shape[1] - 1)
+    row0 = jnp.take_along_axis(new, j0[..., None, None], axis=1)
+    own_se = scale_exponent(row0, axis=-1)        # (B, S, G) int32
+    pool_se = scale[page]                         # (B, S, G)
+    se = jnp.where(own[..., None], own_se, pool_se)
+
+    qcodes = quantize_page_codes(new, se[..., None], n_bits)
+    codes = codes.at[page.reshape(-1), off.reshape(-1)].set(
+        qcodes.reshape((-1,) + qcodes.shape[2:]).astype(codes.dtype))
+
+    sp = jnp.where(in_alloc & (pos % page_len == 0), page, 0)
+    scale = scale.at[sp.reshape(-1)].set(
+        own_se.reshape((-1,) + own_se.shape[2:]))
+
+    ring = 2 * page_len
+    new_end = startb + adv
+    in_ring = in_alloc & (pos >= new_end[:, None] - ring)
+    toff = jnp.where(in_ring, pos % ring, ring)
+    bidx = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[:, None],
+                            pos.shape)
+    tail = tail.at[bidx.reshape(-1), toff.reshape(-1)].set(
+        new.reshape((-1,) + new.shape[2:]).astype(tail.dtype))
+    return codes, scale, tail
+
+
+def _quant_paged_gather(codes: jnp.ndarray, scale: jnp.ndarray,
+                        tail: jnp.ndarray, table: jnp.ndarray,
+                        lengths: jnp.ndarray, n_bits: int,
+                        dtype) -> jnp.ndarray:
+    """Dequant-fused gather of the compressed pool into the dense logical
+    view, with the newest (possibly partial) page overlaid from the dense
+    tail ring — so positions within two pages of the head are bit-equal to
+    the dense pool's rows and older positions are their log2-quantized
+    images.  Junk rows (trash pages, garbage scales) decode to finite
+    values and are masked by the caller's ``kv_valid_len``."""
+    from repro.core.logquant import dequantize_page_codes
+
+    b, nb = table.shape
+    page_len = codes.shape[1]
+    deq = dequantize_page_codes(
+        codes[table], scale[table][:, :, None, :, None], n_bits, dtype)
+    tb = jnp.maximum(lengths - 1, 0) // page_len          # tail block
+    half = (tb % 2) * page_len                            # ring half of tb
+    j = jnp.arange(page_len, dtype=jnp.int32)
+    tail_rows = jnp.take_along_axis(
+        tail, (half[:, None] + j[None])[..., None, None], axis=1)
+    use_tail = jnp.arange(nb, dtype=jnp.int32)[None] == tb[:, None]
+    g = jnp.where(use_tail[:, :, None, None, None],
+                  tail_rows[:, None].astype(dtype), deq)
+    return g.reshape((b, nb * page_len) + codes.shape[2:])
 
 
 def _paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
@@ -347,6 +462,57 @@ def attention(p, x: jnp.ndarray, positions: jnp.ndarray, cfg,
         out = flash_attention(q, k, v, positions, positions, causal=True,
                               kv_chunk=cfg.kv_chunk)
         new_cache = None
+    elif isinstance(cache, QuantPagedKVCache):
+        # log2-quantized page pool: same (page, offset) addressing as the
+        # PagedKVCache branch below, but rows quantize on write (packed
+        # codes + per-page scale) and reads dequantize — fused into the
+        # gather here, or into the Pallas kernel's per-page block loads.
+        # The newest two pages stay dense in the tail ring, so
+        # decode-adjacent tokens are bit-equal to the dense pool's
+        # (DESIGN.md §Quantized KV pages).
+        pos = cache.length[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+        if chunk_valid is not None:
+            keep = (jnp.arange(s, dtype=jnp.int32)[None]
+                    < chunk_valid[:, None])
+            adv = chunk_valid
+        else:
+            keep = jnp.ones((b, s), bool)
+            adv = jnp.int32(s)
+        n_bits = getattr(cfg, "kv_bits", 4)
+        kcd, ksc, ktl = _quant_paged_write(
+            cache.k_codes, cache.k_scale, cache.k_tail, cache.page_table,
+            k, pos, keep, cache.length, adv, n_bits)
+        vcd, vsc, vtl = _quant_paged_write(
+            cache.v_codes, cache.v_scale, cache.v_tail, cache.page_table,
+            v, pos, keep, cache.length, adv, n_bits)
+        kcd = shard(kcd, "pool")
+        vcd = shard(vcd, "pool")
+        ktl = shard(ktl, "cache")
+        vtl = shard(vtl, "cache")
+        new_len = cache.length + adv
+        if s == 1 and getattr(cfg, "paged_attn_kernel", "off") != "off":
+            from repro.kernels.paged_attention.ops import \
+                paged_decode_attention_quant
+            out = paged_decode_attention_quant(
+                q, kcd, ksc, vcd, vsc, ktl, vtl, cache.page_table, new_len,
+                n_bits=n_bits, splits=getattr(cfg, "paged_attn_splits", 1))
+        else:
+            kg = _quant_paged_gather(kcd, ksc, ktl, cache.page_table,
+                                     new_len, n_bits, ktl.dtype)
+            vg = _quant_paged_gather(vcd, vsc, vtl, cache.page_table,
+                                     new_len, n_bits, vtl.dtype)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(kg.shape[1], dtype=jnp.int32), (b, kg.shape[1]))
+            if s == 1:
+                out = _decode_attention(q, kg, vg, positions, kv_pos,
+                                        kv_valid_len=new_len)
+            else:
+                out = _chunk_attention(q, kg, vg, positions, kv_pos,
+                                       kv_valid_len=new_len)
+        new_cache = QuantPagedKVCache(
+            k_codes=kcd, v_codes=vcd, k_scale=ksc, v_scale=vsc,
+            k_tail=ktl, v_tail=vtl, page_table=cache.page_table,
+            length=new_len)
     elif isinstance(cache, PagedKVCache):
         # paged slot pool: per-page scatter writes + page-gathered reads.
         # Covers BOTH the decode step (S=1, every row appends at its own

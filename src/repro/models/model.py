@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.core.shiftadd import as_quant_ctx
 from repro.models import moe as moe_lib
 from repro.models import ssd as ssd_lib
-from repro.models.attention import KVCache, PagedKVCache, attention
+from repro.models.attention import (KVCache, PagedKVCache,
+                                    QuantPagedKVCache, attention)
 from repro.models.layers import (dense, dense_init, embed_init, rms_norm,
                                  swiglu)
 from repro.models.sharding import shard
@@ -73,6 +74,13 @@ class ModelConfig:
     # flash-decode.  Only consulted on the PagedKVCache decode path.
     paged_attn_kernel: str = "off"    # off | pallas
     paged_attn_splits: int = 1
+    # log2-quantized KV pages (DESIGN.md §Quantized KV pages): the paged
+    # pool stores packed core/logquant codes + per-page power-of-two scale
+    # exponents instead of full-precision rows; a dense f32 tail ring keeps
+    # the newest (partial) page exact.  Only consulted by init_paged_pool /
+    # the PagedKVCache paths.
+    kv_quant: bool = False
+    kv_bits: int = 4
     # attention class: 'full' is quadratic -> long_500k is skipped for these
     # (DESIGN.md §Skips); SSM/hybrid run it.
     sub_quadratic: bool = False
@@ -261,6 +269,18 @@ def init_paged_pool(cfg: ModelConfig, batch: int, max_len: int,
     True)``.  ``max_len`` must be a multiple of ``page_len`` so the
     gathered per-slot view ``(B, blocks * page_len, ...)`` matches the
     dense slab shape exactly (the bit-equality bar).
+
+    ``cfg.kv_quant=True`` swaps the full-precision K/V pools for the
+    log2-compressed page format (DESIGN.md §Quantized KV pages): packed
+    wire codes ``{k,v}_codes (R, n_pages, page_len, G, D)``
+    (``core.logquant.code_dtype(cfg.kv_bits)``), per-page power-of-two
+    scale exponents ``{k,v}_scale (R, n_pages, G)`` int32, and a dense
+    per-slot tail ring ``{k,v}_tail (R, B, 2*page_len + 1, G, D)`` that
+    holds each slot's newest two pages exactly (row ``2*page_len`` is the
+    junk bin for masked writes).  Two pages — not one — so a page-boundary
+    junk write from an inactive slot (frozen length ≡ 0 mod page_len)
+    lands in the ring slot of a position two pages back, never clobbering
+    a row the overlay still reads.
     """
     if max_len % page_len:
         raise ValueError(f"max_len={max_len} must be a multiple of "
@@ -270,7 +290,22 @@ def init_paged_pool(cfg: ModelConfig, batch: int, max_len: int,
     layers = []
     for kind in cfg.pattern:
         base = kind.split("_")[0]
-        if base == "attn":
+        if base == "attn" and cfg.kv_quant:
+            from repro.core.logquant import code_dtype
+            ct = code_dtype(cfg.kv_bits)
+            kv_shape = (cfg.repeats, n_pages, page_len,
+                        cfg.n_kv_heads, cfg.head_dim)
+            tail_shape = (cfg.repeats, batch, 2 * page_len + 1,
+                          cfg.n_kv_heads, cfg.head_dim)
+            c = {"k_codes": jnp.zeros(kv_shape, ct),
+                 "v_codes": jnp.zeros(kv_shape, ct),
+                 "k_scale": jnp.zeros((cfg.repeats, n_pages,
+                                       cfg.n_kv_heads), jnp.int32),
+                 "v_scale": jnp.zeros((cfg.repeats, n_pages,
+                                       cfg.n_kv_heads), jnp.int32),
+                 "k_tail": jnp.zeros(tail_shape, dtype),
+                 "v_tail": jnp.zeros(tail_shape, dtype)}
+        elif base == "attn":
             c = {"k": jnp.zeros((cfg.repeats, n_pages, page_len,
                                  cfg.n_kv_heads, cfg.head_dim), dtype),
                  "v": jnp.zeros((cfg.repeats, n_pages, page_len,
@@ -299,6 +334,14 @@ def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
     if base == "attn":
         if cache is None:
             kv = None
+        elif page_table is not None and "k_codes" in cache:
+            # log2-quantized page pool: packed codes + per-page scales +
+            # dense tail ring (models/attention.py quantized paths)
+            kv = QuantPagedKVCache(
+                k_codes=cache["k_codes"], v_codes=cache["v_codes"],
+                k_scale=cache["k_scale"], v_scale=cache["v_scale"],
+                k_tail=cache["k_tail"], v_tail=cache["v_tail"],
+                page_table=page_table, length=cache_len)
         elif page_table is not None:
             # paged slot pool: this layer's KV is a page pool indexed by
             # the shared host-built page table (models/attention.py)
@@ -308,7 +351,14 @@ def _apply_block(cfg: ModelConfig, kind: str, p: Params, x, positions,
             kv = KVCache(k=cache["k"], v=cache["v"], length=cache_len)
         out, new_kv = attention(p, h, positions, cfg, cache=kv, quant=quant,
                                 chunk_valid=chunk_valid)
-        new_cache = None if new_kv is None else {"k": new_kv.k, "v": new_kv.v}
+        if new_kv is None:
+            new_cache = None
+        elif isinstance(new_kv, QuantPagedKVCache):
+            new_cache = {"k_codes": new_kv.k_codes, "v_codes": new_kv.v_codes,
+                         "k_scale": new_kv.k_scale, "v_scale": new_kv.v_scale,
+                         "k_tail": new_kv.k_tail, "v_tail": new_kv.v_tail}
+        else:
+            new_cache = {"k": new_kv.k, "v": new_kv.v}
     else:
         st = None if cache is None else ssd_lib.SSMState(
             ssm=cache["ssm"], conv=cache["conv"])

@@ -363,3 +363,33 @@ class RadixCache:
 def blocks_for_tokens(n_tokens: int, page_len: int) -> int:
     """Pages needed to hold ``n_tokens`` (ceil division)."""
     return -(-int(n_tokens) // int(page_len))
+
+
+def page_kv_bytes(page_len: int, n_kv_heads: int, head_dim: int, *,
+                  layers: int = 1, quant: bool = False, kv_bits: int = 4,
+                  dtype_bytes: int = 4) -> int:
+    """Device bytes ONE pool page holds (K and V, ``layers`` attention
+    layer-repeats).  Dense pages store ``dtype_bytes`` per element; log2-
+    quantized pages store one packed wire code per element
+    (``core.logquant.code_dtype``: 1 byte below 8 exponent bits, else 2)
+    plus a per-(page, head) int32 scale exponent.  Pure arithmetic — the
+    EXACT-gated byte rows of ``serve_bench --kv-quant`` come from here,
+    not from measurement."""
+    elems = int(page_len) * int(n_kv_heads) * int(head_dim)
+    if quant:
+        code = 2 if int(kv_bits) >= 8 else 1
+        per = elems * code + int(n_kv_heads) * 4
+    else:
+        per = elems * int(dtype_bytes)
+    return 2 * int(layers) * per
+
+
+def tail_ring_bytes(page_len: int, n_kv_heads: int, head_dim: int, *,
+                    layers: int = 1, dtype_bytes: int = 4) -> int:
+    """Device bytes of ONE slot's dense tail ring (quantized pools only):
+    ``2 * page_len + 1`` rows — two pages plus the junk bin — per
+    direction per layer-repeat.  Per-slot decode-adjacent working set,
+    amortized per request by the bench."""
+    rows = 2 * int(page_len) + 1
+    return (2 * int(layers) * rows * int(n_kv_heads) * int(head_dim)
+            * int(dtype_bytes))

@@ -223,7 +223,9 @@ class ServeScheduler:
                  snapshot_limit: int = 8,
                  min_prefix_hit: Optional[int] = None,
                  attn_kernel: bool | str = False,
-                 attn_splits: int = 1):
+                 attn_splits: int = 1,
+                 kv_quant: bool = False,
+                 kv_bits: int = 4):
         if cfg.frontend != "none":
             raise ValueError("ServeScheduler serves token-id models only "
                              f"(frontend={cfg.frontend!r})")
@@ -310,6 +312,20 @@ class ServeScheduler:
             # models.attention, with no engine-level plumbing
             cfg = cfg.replace(paged_attn_kernel=attn_kernel,
                               paged_attn_splits=attn_splits)
+        kv_quant = bool(kv_quant)
+        kv_bits = int(kv_bits)
+        if kv_quant:
+            if not paged:
+                raise ValueError("kv_quant=True requires paged=True (the "
+                                 "compressed page format lives in the pool)")
+            if not 2 <= kv_bits <= 8:
+                raise ValueError(f"kv_bits={kv_bits} must be in [2, 8]")
+            # like attn_kernel, the quantized-pool mode rides the config:
+            # init_paged_pool emits the codes/scale/tail leaves and
+            # models.attention dispatches the quantize-on-write path
+            cfg = cfg.replace(kv_quant=True, kv_bits=kv_bits)
+        self.kv_quant = kv_quant
+        self.kv_bits = kv_bits
         self.attn_kernel = attn_kernel
         self.attn_splits = attn_splits
         self.cfg = cfg
@@ -360,7 +376,11 @@ class ServeScheduler:
             # cached_tokens prompt tokens were served straight from shared
             # pages — their prefill compute AND cache writes were skipped
             self.prefix_stats = {"prompt_tokens": 0, "cached_tokens": 0,
-                                 "prefill_tokens": 0}
+                                 "prefill_tokens": 0,
+                                 # pool-footprint accounting (serve_bench
+                                 # --kv-quant): pages each admitted slot
+                                 # held, admissions counted
+                                 "pages_held": 0, "admitted": 0}
         else:
             self._pool = init_caches(cfg, max_slots, max_len, dtype=cfg.dtype,
                                      per_slot=True)
@@ -387,8 +407,14 @@ class ServeScheduler:
             self._pool = jax.device_put(self._pool, spec["caches"])
             self._logits = jax.device_put(self._logits, spec["logits"])
             # batch-1 prefill outputs replicate (a 1-row batch divides no
-            # data axis); the slot write scatters them into the sharded pool
-            cache1_sh = jax.tree.map(lambda _: rep, self._pool)
+            # data axis); the slot write scatters them into the sharded pool.
+            # Built from the DENSE 1-row cache tree, not the pool — under
+            # kv_quant the pool's layer dicts carry codes/scale/tail leaves
+            # the prefill output doesn't have
+            cache1_sh = jax.tree.map(
+                lambda _: rep,
+                jax.eval_shape(lambda: init_caches(cfg, 1, max_len,
+                                                   dtype=cfg.dtype)))
             # paged mode threads the host-built (B, n_blocks) page table
             # through every device program; its rows ride the slot batch
             # sharding like the token slab
@@ -417,9 +443,12 @@ class ServeScheduler:
                 cow_out=spec["caches"],
                 snap_in=(spec["caches"], rep),
                 snap_out=rep,
-                hit_in=(spec["caches"], rep, rep),
+                # kv_quant appends the scalar tail-page id operand
+                hit_in=(spec["caches"], rep, rep)
+                + ((rep,) if self.kv_quant else ()),
                 hit_out=spec["caches"],
-                hit_snap_in=(spec["caches"], rep, rep, rep),
+                hit_snap_in=(spec["caches"], rep, rep, rep)
+                + ((rep,) if self.kv_quant else ()),
             )
         else:
             sh = collections.defaultdict(lambda: None)
@@ -450,6 +479,40 @@ class ServeScheduler:
                 valid = pos < true_len
                 page = jnp.where(valid, page_row[pos // pl], TRASH_PAGE)
                 off = jnp.where(valid, pos % pl, 0)
+
+                def quant_write(c_pool, c_slot):
+                    # quantize the freshly-prefilled dense slab page-wise:
+                    # codes under each page's first-row scale, the scale
+                    # entries themselves (valid pages only — dead pages
+                    # redirect to the trash entry), and the newest two
+                    # pages dense into slot i's tail ring (older rows and
+                    # pad rows hit the junk bin, row 2*page_len)
+                    from repro.core.logquant import (quantize_page_codes,
+                                                     scale_exponent)
+                    nb_ = max_len // pl
+                    ring = 2 * pl
+                    bv = jnp.arange(nb_, dtype=jnp.int32) * pl < true_len
+                    sp = jnp.where(bv, page_row, TRASH_PAGE)
+                    in_ring = valid & (pos >= true_len - ring)
+                    toff = jnp.where(in_ring, pos % ring, ring)
+                    out = {}
+                    for k in ("k", "v"):
+                        x = c_slot[k][:, 0].astype(jnp.float32)
+                        xb = x.reshape(x.shape[0], nb_, pl, *x.shape[2:])
+                        se = scale_exponent(xb[:, :, 0], axis=-1)
+                        qc = quantize_page_codes(
+                            xb, se[:, :, None, :, None], self.kv_bits)
+                        qc = qc.reshape(x.shape[0], max_len, *x.shape[2:])
+                        codes = c_pool[f"{k}_codes"]
+                        out[f"{k}_codes"] = codes.at[:, page, off].set(
+                            qc.astype(codes.dtype))
+                        out[f"{k}_scale"] = c_pool[f"{k}_scale"].at[
+                            :, sp].set(se)
+                        tail = c_pool[f"{k}_tail"]
+                        out[f"{k}_tail"] = tail.at[:, i, toff].set(
+                            c_slot[k][:, 0].astype(tail.dtype))
+                    return out
+
                 layers = []
                 for c_pool, c_slot in zip(pool["layers"],
                                           slot_cache["layers"]):
@@ -457,6 +520,8 @@ class ServeScheduler:
                         layers.append({k: jax.lax.dynamic_update_slice_in_dim(
                             c_pool[k], c_slot[k].astype(c_pool[k].dtype),
                             i, axis=1) for k in c_pool})
+                    elif self.kv_quant:
+                        layers.append(quant_write(c_pool, c_slot))
                     else:
                         layers.append({k: c_pool[k].at[:, page, off].set(
                             c_slot[k][:, 0].astype(c_pool[k].dtype))
@@ -593,16 +658,24 @@ class ServeScheduler:
         # and the prefix-hit admission write (length + snapshot restore).
         self._cow = self._snap = None
         if self.paged:
+            # COW must copy a quantized page's codes AND its scale entry
+            # together — codes are meaningless under another page's scale;
+            # the per-slot tail rings aren't page-addressed and pass through
+            cow_keys = (("k_codes", "v_codes", "k_scale", "v_scale")
+                        if self.kv_quant else ("k", "v"))
+
             def cow_pages(pool, src, dst):
                 layers = []
                 for c in pool["layers"]:
                     if "ssm" in c:
                         layers.append(c)
                     else:
-                        layers.append({k: c[k].at[:, dst].set(
+                        nc = dict(c)
+                        nc.update({k: c[k].at[:, dst].set(
                             jax.lax.dynamic_slice_in_dim(
                                 c[k], src, 1, axis=1)[:, 0])
-                            for k in ("k", "v")})
+                            for k in cow_keys})
+                        layers.append(nc)
                 return {"layers": tuple(layers), "length": pool["length"]}
 
             self._cow = engine.jit_sharded(
@@ -621,10 +694,13 @@ class ServeScheduler:
                 snap_slot, mesh, in_shardings=sh["snap_in"],
                 out_shardings=sh["snap_out"])
 
-            def admit_hit(pool, i, hit_len, snaps=None):
+            def admit_hit(pool, i, hit_len, snaps=None, tail_pg=None):
                 length = jax.lax.dynamic_update_slice_in_dim(
                     pool["length"], hit_len[None].astype(jnp.int32),
                     i, axis=0)
+                pl = self.page_len
+                tb = jnp.maximum(hit_len - 1, 0) // pl
+                half = (tb % 2) * pl
                 layers = []
                 si = 0
                 for c in pool["layers"]:
@@ -635,19 +711,53 @@ class ServeScheduler:
                             {k: jax.lax.dynamic_update_slice_in_dim(
                                 c[k], sn[k].astype(c[k].dtype), i, axis=1)
                              for k in c})
+                    elif "k_codes" in c and tail_pg is not None:
+                        # restore slot i's tail ring from the hit's tail
+                        # page: the overlay reads the newest page from the
+                        # ring, and the previous occupant's rows are stale
+                        # junk.  Dequantized rows are exactly what every
+                        # later read of these positions would decode from
+                        # the pool, so the quantized-read semantics are
+                        # unchanged — only the ring-vs-pool routing is.
+                        from repro.core.logquant import dequantize_page_codes
+                        nc = dict(c)
+                        for k in ("k", "v"):
+                            pg = jax.lax.dynamic_slice_in_dim(
+                                c[f"{k}_codes"], tail_pg, 1, axis=1)[:, 0]
+                            se = jax.lax.dynamic_slice_in_dim(
+                                c[f"{k}_scale"], tail_pg, 1, axis=1)
+                            rows = dequantize_page_codes(
+                                pg, se[..., None], self.kv_bits,
+                                c[f"{k}_tail"].dtype)
+                            nc[f"{k}_tail"] = jax.lax.dynamic_update_slice(
+                                c[f"{k}_tail"], rows[:, None],
+                                (0, i, half, 0, 0))
+                        layers.append(nc)
                     else:
                         layers.append(c)
                 return {"layers": tuple(layers), "length": length}
 
-            self._admit_hit_plain = engine.jit_sharded(
-                lambda pool, i, hit_len: admit_hit(pool, i, hit_len),
-                mesh, in_shardings=sh["hit_in"],
-                out_shardings=sh["hit_out"], donate_argnums=(0,))
-            self._admit_hit_snap = engine.jit_sharded(
-                lambda pool, i, hit_len, snaps: admit_hit(pool, i, hit_len,
-                                                          snaps),
-                mesh, in_shardings=sh["hit_snap_in"],
-                out_shardings=sh["hit_out"], donate_argnums=(0,))
+            if self.kv_quant:
+                self._admit_hit_plain = engine.jit_sharded(
+                    lambda pool, i, hit_len, tail_pg: admit_hit(
+                        pool, i, hit_len, tail_pg=tail_pg),
+                    mesh, in_shardings=sh["hit_in"],
+                    out_shardings=sh["hit_out"], donate_argnums=(0,))
+                self._admit_hit_snap = engine.jit_sharded(
+                    lambda pool, i, hit_len, snaps, tail_pg: admit_hit(
+                        pool, i, hit_len, snaps, tail_pg),
+                    mesh, in_shardings=sh["hit_snap_in"],
+                    out_shardings=sh["hit_out"], donate_argnums=(0,))
+            else:
+                self._admit_hit_plain = engine.jit_sharded(
+                    lambda pool, i, hit_len: admit_hit(pool, i, hit_len),
+                    mesh, in_shardings=sh["hit_in"],
+                    out_shardings=sh["hit_out"], donate_argnums=(0,))
+                self._admit_hit_snap = engine.jit_sharded(
+                    lambda pool, i, hit_len, snaps: admit_hit(
+                        pool, i, hit_len, snaps),
+                    mesh, in_shardings=sh["hit_snap_in"],
+                    out_shardings=sh["hit_out"], donate_argnums=(0,))
 
     # ------------------------------------------------------------------ API
 
@@ -774,8 +884,10 @@ class ServeScheduler:
                             + flags + pt)
         if self.paged:
             out["cow"] = (self._cow, (pool, sds((), i32), sds((), i32)))
-            out["admit_hit"] = (self._admit_hit_plain,
-                                (pool, sds((), i32), sds((), i32)))
+            hit_args = (pool, sds((), i32), sds((), i32))
+            if self.kv_quant:
+                hit_args += (sds((), i32),)        # tail_pg
+            out["admit_hit"] = (self._admit_hit_plain, hit_args)
             if self._has_ssm:
                 out["snap"] = (self._snap, (pool, sds((), i32)))
         return out
@@ -1110,11 +1222,18 @@ class ServeScheduler:
             # boundary, then ingest only the suffix through the chunk path
             idx = jnp.asarray(slot_idx, jnp.int32)
             hl = jnp.asarray(hit.length, jnp.int32)
+            # quantized pool: the slot's tail ring must be seeded from the
+            # hit's newest page (the previous occupant's ring rows are
+            # junk); the table row above already names that page
+            tpg = ((jnp.asarray(
+                int(self._table[slot_idx, (hit.length - 1) // pl]),
+                jnp.int32),) if self.kv_quant else ())
             if hit.snapshot is not None:
                 self._pool = self._admit_hit_snap(self._pool, idx, hl,
-                                                  hit.snapshot)
+                                                  hit.snapshot, *tpg)
             else:
-                self._pool = self._admit_hit_plain(self._pool, idx, hl)
+                self._pool = self._admit_hit_plain(self._pool, idx, hl,
+                                                   *tpg)
             slot = _Slot(req=req, admitted_tick=self._tick_count,
                          phase="prefill", prefill_pos=hit.length,
                          hit_len=hit.length)
@@ -1138,6 +1257,8 @@ class ServeScheduler:
                 slot.snapshot = self._snap(self._pool,
                                            jnp.asarray(slot_idx, jnp.int32))
         slot.pages = pages
+        self.prefix_stats["pages_held"] += len(pages)
+        self.prefix_stats["admitted"] += 1
         self._active[slot_idx] = True
         self._slots[slot_idx] = slot
         return "ok"

@@ -20,15 +20,16 @@ needs_hypothesis = pytest.mark.skipif(
     not HAVE_HYPOTHESIS, reason="hypothesis not installed (deterministic "
                                 "fallback cases cover the same invariants)")
 
-from repro.core import (calibrate_act_scale, from_bitplanes, log2_dequantize,
-                        log2_quantize, log2_quantize_naive, needed_bits,
-                        pack_codes, pack_planes, quantize_weights,
-                        quantized_linear_apply, quantized_linear_init,
-                        shift_product, shiftadd_matmul_bitplane,
-                        shiftadd_matmul_elementwise, shiftadd_matmul_exact,
-                        to_bitplanes, unpack_codes, unpack_planes,
-                        weight_access_report, zero_sentinel)
-from repro.core.logquant import LogQuantized
+from repro.core import (calibrate_act_scale, code_dtype, from_bitplanes,
+                        log2_dequantize, log2_quantize, log2_quantize_naive,
+                        needed_bits, pack_codes, pack_planes,
+                        quantize_weights, quantized_linear_apply,
+                        quantized_linear_init, shift_product,
+                        shiftadd_matmul_bitplane, shiftadd_matmul_elementwise,
+                        shiftadd_matmul_exact, to_bitplanes, unpack_codes,
+                        unpack_planes, weight_access_report, zero_sentinel)
+from repro.core.logquant import (LogQuantized, negative_fraction,
+                                 scale_exponent)
 
 if HAVE_HYPOTHESIS:
     finite_f32 = st.floats(min_value=-1e4, max_value=1e4, width=32,
@@ -148,6 +149,110 @@ class TestLog2Quant:
             qdt = log2_quantize(jnp.asarray(x).astype(dt))
             np.testing.assert_array_equal(np.asarray(q32.exp),
                                           np.asarray(qdt.exp))
+
+
+def _check_pack_roundtrip_width(xs, n_bits):
+    """(exp, sign) -> packed wire code -> (exp, sign) is lossless at every
+    encoding width, zero-sentinel and negative entries included."""
+    q = log2_quantize(jnp.asarray(xs, jnp.float32), n_bits)
+    codes = pack_codes(q, n_bits)
+    assert codes.dtype == code_dtype(n_bits)
+    q2 = unpack_codes(codes, n_bits)
+    np.testing.assert_array_equal(np.asarray(q.exp), np.asarray(q2.exp))
+    np.testing.assert_array_equal(np.asarray(q.sign), np.asarray(q2.sign))
+
+
+class TestCodeWidths:
+    """Wire-code round trips across encoding widths (the quantized KV pool
+    stores these codes; ISSUE 9).  n_bits=8 is the width whose packed code
+    (9 bits with the sign) outgrows int8 — the ``code_dtype`` widening."""
+
+    WIDTHS = (2, 3, 4, 5, 8)
+
+    @pytest.mark.parametrize("n_bits", WIDTHS)
+    def test_pack_roundtrip_seeded(self, n_bits):
+        for xs in _seeded_float_batches():
+            _check_pack_roundtrip_width(xs, n_bits)
+
+    @pytest.mark.parametrize("n_bits", WIDTHS)
+    def test_sentinel_and_extremes_roundtrip(self, n_bits):
+        # exact zeros (sentinel), +/- of the tiniest/hugest magnitudes, and
+        # both clip directions survive the pack
+        edge = [0.0, -0.0, 1e-30, -1e-30, 1e30, -1e30, 1.0, -1.0,
+                2.0 ** zero_sentinel(n_bits), -(2.0 ** zero_sentinel(n_bits))]
+        _check_pack_roundtrip_width(edge, n_bits)
+        q = log2_quantize(jnp.asarray(edge, jnp.float32), n_bits)
+        assert int(q.exp[0]) == zero_sentinel(n_bits)
+
+    @pytest.mark.parametrize("n_bits", WIDTHS)
+    def test_negative_fraction_survives_pack(self, n_bits):
+        """The D&S unit's Fig. 2 statistic reads unpacked codes; packing
+        must preserve it exactly — negative-heavy batches included."""
+        rng = np.random.default_rng(9)
+        x = -np.abs(rng.normal(0, 0.3, 128)).astype(np.float32)
+        x[:8] = 0.0
+        q = log2_quantize(jnp.asarray(x), n_bits)
+        q2 = unpack_codes(pack_codes(q, n_bits), n_bits)
+        np.testing.assert_array_equal(
+            np.asarray(negative_fraction(q, n_bits)),
+            np.asarray(negative_fraction(q2, n_bits)))
+
+    @needs_hypothesis
+    def test_pack_roundtrip_property(self):
+        @settings(max_examples=150, deadline=None)
+        @given(n_bits=st.sampled_from(WIDTHS),
+               xs=st.lists(finite_f32, min_size=1, max_size=64))
+        def run(n_bits, xs):
+            _check_pack_roundtrip_width(xs, n_bits)
+        run()
+
+    def test_n_bits_property_reports_actual_width(self):
+        """LogQuantized.n_bits: the smallest width whose exponent range
+        (sentinel included) covers the stored exponents."""
+        def q(exps):
+            e = jnp.asarray(exps, jnp.int8)
+            return LogQuantized(exp=e, sign=jnp.ones_like(e))
+        assert q([0, 1, -1]).n_bits == 2
+        assert q([-2]).n_bits == 2            # exactly the 2-bit sentinel
+        assert q([2]).n_bits == 3             # above the 2-bit max of 1
+        assert q([-3]).n_bits == 3
+        assert q([7]).n_bits == 4
+        assert q([-8, 7]).n_bits == 4
+        assert q([8]).n_bits == 5
+        assert q([127]).n_bits == 8
+        assert q([-128]).n_bits == 8
+        assert q([]).n_bits == 2              # empty: smallest encoding
+        for n in (2, 3, 4, 5, 8):
+            got = log2_quantize(jnp.asarray(_seeded_float_batches(1)[0]), n)
+            assert got.n_bits <= n
+
+    def test_code_dtype_widening(self):
+        assert code_dtype(2) == jnp.int8 and code_dtype(7) == jnp.int8
+        assert code_dtype(8) == jnp.int16
+
+
+class TestScaleExponent:
+    def test_power_of_two_scale(self):
+        x = jnp.asarray([[0.75, -3.0, 0.0], [2.0 ** -9, 0.0, 0.0],
+                         [0.0, 0.0, 0.0]], jnp.float32)
+        se = scale_exponent(x, axis=-1)
+        assert se.tolist() == [1, -9, 0]      # floor(log2 max|x|); zeros -> 0
+        assert se.dtype == jnp.int32
+
+    def test_scaled_quantize_is_idempotent(self):
+        """The KV-page rewrite invariant at the core level: dividing by the
+        power-of-two scale then log2-quantizing an already-dequantized
+        value reproduces the exponent exactly (mantissa field 0 sits below
+        the sqrt(2) comparator threshold)."""
+        rng = np.random.default_rng(13)
+        x = (rng.normal(0, 2.0, 256) * rng.choice([1e-3, 1.0, 1e2], 256)
+             ).astype(np.float32)
+        se = scale_exponent(jnp.asarray(x), axis=-1, keepdims=True)
+        inv = jnp.exp2(-se.astype(jnp.float32))
+        q1 = log2_quantize(jnp.asarray(x) * inv)
+        xh = log2_dequantize(q1) * jnp.exp2(se.astype(jnp.float32))
+        q2 = log2_quantize(xh * inv)
+        np.testing.assert_array_equal(np.asarray(q1.exp), np.asarray(q2.exp))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,579 @@
+"""Log2-quantized KV cache pages (ISSUE 9): the packed-code page pool +
+f32 tail ring vs the dense paged path, at every layer of the stack —
+pool-primitive round-trips, the fused quant kernel vs the dequantized-pool
+oracle, adversarial garbage-code isolation, and end-to-end scheduler token
+parity (gather vs kernel, prefix hits, COW partial pages, SSM snapshot
+restore, GQA, meshes).
+
+Property tests use ``hypothesis`` when installed (``requirements-dev.txt``);
+without it the same invariants run over a deterministic seeded lattice.
+
+Exactness bars (referenced from DESIGN.md §Quantized KV pages):
+
+* **code round-trip**: BITWISE.  ``dequantize -> requantize`` under the
+  same power-of-two page scale reproduces the packed codes byte-for-byte
+  (the rewrite invariant the per-tick page rewrite depends on) — the
+  scale never perturbs the mantissa, a decoded power of two re-rounds to
+  itself, and pruned values carry the canonical positive-sign sentinel.
+* **quant kernel vs dequantized-pool oracle, float32**: the kernel fuses
+  the dequant into its block loads, so vs a dense kernel run over the
+  *dequantized* pool (tail pages replaced by the ring's exact rows) the
+  only difference is softmax reassociation — ``rtol=2e-5, atol=2e-6``,
+  the same bar as the dense kernel vs its oracle.
+* **garbage-code isolation**: BITWISE.  Trash-page codes/scales and the
+  tail ring's dead half decode to large-but-finite values (the summed
+  exponent is clamped to the f32 normal range) and are masked before the
+  online max, so live-row outputs are ``assert_array_equal``-independent
+  of them.
+* **scheduler tokens**: quant-gather vs quant-kernel, and prefix-hit vs
+  miss admissions of the same prompt, agree token-for-token on every
+  tested seed/arch — the same empirical per-seed bar as the dense kernel
+  parity suite.  Dense-vs-quant token *divergence* is a measured number,
+  EXACT-gated by the ``serve_bench --kv-quant`` baseline, not asserted
+  here.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed (the deterministic "
+                                "lattice covers the same invariants)")
+
+from repro.configs import get_smoke
+from repro.core import (code_dtype, dequantize_page_codes,
+                        quantize_page_codes, scale_exponent)
+from repro.core.logquant import unpack_codes, zero_sentinel
+from repro.kernels.paged_attention.ops import (paged_decode_attention,
+                                               paged_decode_attention_quant)
+from repro.models import init_params
+from repro.serving import engine
+from repro.serving.kvpool import TRASH_PAGE
+from repro.serving.scheduler import ServeScheduler
+
+F32_TOL = dict(rtol=2e-5, atol=2e-6)
+N_BITS_SWEEP = (2, 3, 4, 5, 8)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# pool-primitive round trips (the rewrite invariant)
+# ---------------------------------------------------------------------------
+
+def _check_requant_bit_stable(x, n_bits):
+    """quantize -> dequantize -> requantize under the SAME scale is a
+    bitwise fixed point — what lets the serve tick rewrite a partial
+    page's codes every step without drift."""
+    x = jnp.asarray(x, jnp.float32)
+    se = scale_exponent(x, axis=-1, keepdims=True)
+    c1 = quantize_page_codes(x, se, n_bits)
+    xh = dequantize_page_codes(c1, se, n_bits)
+    c2 = quantize_page_codes(xh, se, n_bits)
+    assert c1.dtype == code_dtype(n_bits)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def _check_dequant_half_octave(x, n_bits):
+    """Non-pruned, non-clipped entries decode within half an octave of the
+    original (round-to-nearest exponent)."""
+    x = jnp.asarray(x, jnp.float32)
+    se = scale_exponent(x, axis=-1, keepdims=True)
+    codes = quantize_page_codes(x, se, n_bits)
+    xh = np.asarray(dequantize_page_codes(codes, se, n_bits))
+    q = unpack_codes(codes, n_bits)
+    emax = (1 << (n_bits - 1)) - 1
+    free = (np.asarray(q.exp) != zero_sentinel(n_bits)) \
+        & (np.asarray(q.exp) != emax) & (np.asarray(x) != 0)
+    if not free.any():
+        return
+    ratio = np.abs(xh[free]) / np.abs(np.asarray(x)[free])
+    assert ((ratio >= 2 ** -0.51) & (ratio <= 2 ** 0.51)).all()
+    # signs survive the trip wherever the value wasn't pruned
+    np.testing.assert_array_equal(np.sign(xh[free]),
+                                  np.sign(np.asarray(x)[free]))
+
+
+def _seeded_rows(n_rows=12, width=32):
+    rng = np.random.default_rng(77)
+    out = []
+    for i in range(n_rows):
+        mag = rng.choice([1e-5, 1e-2, 0.5, 1.0, 64.0, 1e3], width)
+        x = (rng.normal(0, 1.0, width) * mag).astype(np.float32)
+        x[rng.random(width) < 0.15] = 0.0       # exact zeros (sentinel path)
+        if i % 3 == 0:
+            x = -np.abs(x)                       # all-negative rows
+        out.append(x)
+    return out
+
+
+class TestPageCodeRoundTrip:
+    @pytest.mark.parametrize("n_bits", N_BITS_SWEEP)
+    def test_requant_bit_stable_seeded(self, n_bits):
+        for x in _seeded_rows():
+            _check_requant_bit_stable(x, n_bits)
+
+    @pytest.mark.parametrize("n_bits", N_BITS_SWEEP)
+    def test_dequant_half_octave_seeded(self, n_bits):
+        for x in _seeded_rows():
+            _check_dequant_half_octave(x, n_bits)
+
+    @needs_hypothesis
+    def test_requant_bit_stable_property(self):
+        @settings(max_examples=150, deadline=None)
+        @given(n_bits=st.sampled_from(N_BITS_SWEEP),
+               xs=st.lists(st.floats(min_value=-1e4, max_value=1e4, width=32,
+                                     allow_nan=False, allow_infinity=False),
+                           min_size=1, max_size=64))
+        def run(n_bits, xs):
+            _check_requant_bit_stable(np.asarray(xs, np.float32), n_bits)
+        run()
+
+    def test_zero_page_quantizes_to_sentinel_codes(self):
+        """An all-zero page (fresh pool) stores the canonical sentinel code
+        everywhere and decodes back to exact +0.0."""
+        x = jnp.zeros((4, 8), jnp.float32)
+        se = scale_exponent(x, axis=-1, keepdims=True)
+        codes = quantize_page_codes(x, se, 4)
+        want = np.int8(zero_sentinel(4) << 1)    # positive-sign sentinel
+        np.testing.assert_array_equal(np.asarray(codes),
+                                      np.full((4, 8), want, np.int8))
+        back = np.asarray(dequantize_page_codes(codes, se, 4))
+        np.testing.assert_array_equal(back, np.zeros((4, 8), np.float32))
+        assert not np.signbit(back).any()
+
+    def test_garbage_scale_decodes_finite(self):
+        """Trash-page scales are arbitrary int32 garbage; the dequant clamp
+        keeps every decode finite (masking, not saturation arithmetic,
+        erases them downstream)."""
+        codes = jnp.asarray(np.random.default_rng(0).integers(
+            -128, 128, (3, 16)), jnp.int8)
+        for se in (10 ** 9, -10 ** 9, 127, -127):
+            out = np.asarray(dequantize_page_codes(
+                codes, jnp.full((3, 1), se, jnp.int32), 4))
+            assert np.isfinite(out).all()
+
+
+# ---------------------------------------------------------------------------
+# quant kernel vs dequantized-pool oracle
+# ---------------------------------------------------------------------------
+
+def _make_quant_case(rng, *, page_len, nb, g, r, d, lengths, n_bits=4,
+                     trash_garbage=0):
+    """Scheduler-layout quant pool: per-row fresh pages + the trash page,
+    packed codes with per-(page, head) scales from each page's first row,
+    and a 2-page dense tail ring whose *active* half holds the tail-page
+    positions exactly — the dead half and the junk bin are garbage."""
+    b = len(lengths)
+    n_pages = 1 + b * nb
+    k = rng.standard_normal((n_pages, page_len, g, d)).astype(np.float32)
+    v = rng.standard_normal((n_pages, page_len, g, d)).astype(np.float32)
+    table = np.full((b, nb), TRASH_PAGE, np.int32)
+    nxt = 1
+    for i, ln in enumerate(lengths):
+        for j in range(-(-int(ln) // page_len)):
+            table[i, j] = nxt
+            nxt += 1
+    q = rng.standard_normal((b, 1, g * r, d)).astype(np.float32)
+
+    def quantize(pool):
+        se = scale_exponent(jnp.asarray(pool[:, 0]), axis=-1)       # (P, G)
+        codes = quantize_page_codes(jnp.asarray(pool),
+                                    se[:, None, :, None], n_bits)
+        return np.asarray(codes).copy(), np.asarray(se, np.int32).copy()
+
+    kc, ks = quantize(k)
+    vc, vs = quantize(v)
+    # trash-page garbage: arbitrary codes + scales (never a valid write)
+    grng = np.random.default_rng(1000 + trash_garbage)
+    lo, hi = (-(1 << 8), 1 << 8) if n_bits >= 8 else (-128, 128)
+    for c, s in ((kc, ks), (vc, vs)):
+        c[TRASH_PAGE] = grng.integers(lo, hi, c[TRASH_PAGE].shape)
+        s[TRASH_PAGE] = grng.integers(-10 ** 9, 10 ** 9, s[TRASH_PAGE].shape)
+
+    ring = 2 * page_len
+    k_tail = grng.standard_normal((b, ring + 1, g, d)).astype(np.float32) * 1e3
+    v_tail = grng.standard_normal((b, ring + 1, g, d)).astype(np.float32) * 1e3
+    k_ref = np.asarray(dequantize_page_codes(
+        jnp.asarray(kc), jnp.asarray(ks)[:, None, :, None], n_bits)).copy()
+    v_ref = np.asarray(dequantize_page_codes(
+        jnp.asarray(vc), jnp.asarray(vs)[:, None, :, None], n_bits)).copy()
+    for i, ln in enumerate(lengths):
+        tb = max(int(ln) - 1, 0) // page_len
+        pg = table[i, tb]
+        if pg == TRASH_PAGE:
+            continue
+        half = (tb % 2) * page_len
+        k_tail[i, half:half + page_len] = k[pg]
+        v_tail[i, half:half + page_len] = v[pg]
+        # the oracle's dense pool: dequantized codes everywhere EXCEPT the
+        # tail page, which reads the ring's exact rows
+        k_ref[pg] = k[pg]
+        v_ref[pg] = v[pg]
+    as_j = jnp.asarray
+    return dict(q=as_j(q), kc=as_j(kc, code_dtype(n_bits)), ks=as_j(ks),
+                vc=as_j(vc, code_dtype(n_bits)), vs=as_j(vs),
+                k_tail=as_j(k_tail), v_tail=as_j(v_tail),
+                k_ref=as_j(k_ref), v_ref=as_j(v_ref),
+                table=as_j(table), lens=as_j(lengths, jnp.int32))
+
+
+def _lengths_lattice(page_len, nb):
+    mx = page_len * nb
+    cand = [0, 1, page_len - 1, page_len, page_len + 1, 2 * page_len, mx]
+    return [ln for ln in dict.fromkeys(cand) if 0 <= ln <= mx]
+
+
+def _quant_out(c, n_bits, splits):
+    return paged_decode_attention_quant(
+        c["q"], c["kc"], c["ks"], c["vc"], c["vs"], c["k_tail"], c["v_tail"],
+        c["table"], c["lens"], n_bits=n_bits, splits=splits)
+
+
+class TestQuantKernelVsOracle:
+    """The fused dequant (codes + scale -> block rows inside the kernel)
+    plus the tail-ring extra split must equal a dense kernel run over the
+    dequantized pool with exact tail pages — reassociation tolerance only."""
+
+    @pytest.mark.parametrize("page_len,nb", [(1, 4), (4, 4), (8, 3)])
+    @pytest.mark.parametrize("g,r", [(1, 1), (2, 2), (1, 3)])
+    def test_f32_lattice(self, page_len, nb, g, r):
+        rng = np.random.default_rng(page_len * 100 + g * 10 + r)
+        lengths = _lengths_lattice(page_len, nb)
+        c = _make_quant_case(rng, page_len=page_len, nb=nb, g=g, r=r, d=8,
+                             lengths=lengths)
+        live = np.asarray(c["lens"]) > 0
+        for splits in (1, 2, 3):
+            out = np.asarray(_quant_out(c, 4, splits), np.float32)
+            ref = np.asarray(paged_decode_attention(
+                c["q"], c["k_ref"], c["v_ref"], c["table"], c["lens"],
+                splits=1), np.float32)
+            np.testing.assert_allclose(out[live], ref[live], **F32_TOL)
+            assert np.isfinite(out).all()
+
+    @pytest.mark.parametrize("n_bits", N_BITS_SWEEP)
+    def test_n_bits_sweep(self, n_bits):
+        """The oracle is the dequantized pool, so parity is exact-bar at
+        every width — 2-bit's huge quantization error cancels on both
+        sides; what's tested is the fused dequant arithmetic."""
+        rng = np.random.default_rng(300 + n_bits)
+        c = _make_quant_case(rng, page_len=4, nb=4, g=2, r=2, d=8,
+                             lengths=[0, 1, 3, 4, 5, 9, 16], n_bits=n_bits)
+        live = np.asarray(c["lens"]) > 0
+        out = np.asarray(_quant_out(c, n_bits, 2), np.float32)
+        ref = np.asarray(paged_decode_attention(
+            c["q"], c["k_ref"], c["v_ref"], c["table"], c["lens"],
+            splits=1), np.float32)
+        np.testing.assert_allclose(out[live], ref[live], **F32_TOL)
+
+    def test_gqa_wide_groups(self):
+        rng = np.random.default_rng(7)
+        c = _make_quant_case(rng, page_len=4, nb=2, g=3, r=4, d=16,
+                             lengths=[7, 8, 3, 0])
+        live = np.asarray(c["lens"]) > 0
+        out = np.asarray(_quant_out(c, 4, 2), np.float32)
+        ref = np.asarray(paged_decode_attention(
+            c["q"], c["k_ref"], c["v_ref"], c["table"], c["lens"], splits=1),
+            np.float32)
+        np.testing.assert_allclose(out[live], ref[live], **F32_TOL)
+
+    @needs_hypothesis
+    def test_property_parity(self):
+        @settings(max_examples=20, deadline=None)
+        @given(page_len=st.integers(1, 8), nb=st.integers(1, 4),
+               g=st.integers(1, 3), r=st.integers(1, 3),
+               n_bits=st.sampled_from(N_BITS_SWEEP),
+               splits=st.integers(1, 4), seed=st.integers(0, 2 ** 16),
+               data=st.data())
+        def check(page_len, nb, g, r, n_bits, splits, seed, data):
+            mx = page_len * nb
+            lengths = data.draw(st.lists(st.integers(0, mx), min_size=1,
+                                         max_size=5))
+            rng = np.random.default_rng(seed)
+            c = _make_quant_case(rng, page_len=page_len, nb=nb, g=g, r=r,
+                                 d=8, lengths=lengths, n_bits=n_bits)
+            live = np.asarray(c["lens"]) > 0
+            out = np.asarray(_quant_out(c, n_bits, splits), np.float32)
+            ref = np.asarray(paged_decode_attention(
+                c["q"], c["k_ref"], c["v_ref"], c["table"], c["lens"],
+                splits=1), np.float32)
+            np.testing.assert_allclose(out[live], ref[live], **F32_TOL)
+            assert np.isfinite(out).all()
+        check()
+
+
+class TestGarbageIsolation:
+    """Adversarial bytes: trash-page codes/scales, the ring's dead half,
+    and the junk bin vary — live-row outputs must be BITWISE identical."""
+
+    LENGTHS = [0, 1, 3, 4, 5, 9, 16]
+
+    def _outs(self, garbage, splits):
+        rng = np.random.default_rng(31)
+        c = _make_quant_case(rng, page_len=4, nb=4, g=2, r=2, d=8,
+                             lengths=self.LENGTHS, trash_garbage=garbage)
+        return np.asarray(_quant_out(c, 4, splits))
+
+    @pytest.mark.parametrize("splits", [1, 2, 3])
+    def test_garbage_bitwise_invisible(self, splits):
+        live = np.asarray(self.LENGTHS) > 0
+        base = self._outs(0, splits)
+        for garbage in (1, 2):
+            out = self._outs(garbage, splits)
+            np.testing.assert_array_equal(base[live], out[live])
+            assert np.isfinite(out).all()
+
+    def test_aliased_tables_read_like_copies(self):
+        """Prefix-cache aliasing: rows sharing page ids (codes AND scales)
+        read bitwise like rows with deep-copied pages."""
+        rng = np.random.default_rng(32)
+        c = _make_quant_case(rng, page_len=4, nb=4, g=2, r=2, d=8,
+                             lengths=[8, 9, 12])
+        table = np.asarray(c["table"]).copy()
+        table[1, :2] = table[0, :2]
+        table[2, :2] = table[0, :2]
+        aliased = np.asarray(paged_decode_attention_quant(
+            c["q"], c["kc"], c["ks"], c["vc"], c["vs"], c["k_tail"],
+            c["v_tail"], jnp.asarray(table), c["lens"], n_bits=4, splits=2))
+        # materialize the copies (what COW does: codes + scale together)
+        kc, ks = np.asarray(c["kc"]).copy(), np.asarray(c["ks"]).copy()
+        vc, vs = np.asarray(c["vc"]).copy(), np.asarray(c["vs"]).copy()
+        src = table[0, :2]
+        kc = np.concatenate([kc, kc[src], kc[src]])
+        ks = np.concatenate([ks, ks[src], ks[src]])
+        vc = np.concatenate([vc, vc[src], vc[src]])
+        vs = np.concatenate([vs, vs[src], vs[src]])
+        fresh = np.arange(len(kc) - 4, len(kc))
+        t2 = table.copy()
+        t2[1, :2] = fresh[:2]
+        t2[2, :2] = fresh[2:]
+        deep = np.asarray(paged_decode_attention_quant(
+            c["q"], jnp.asarray(kc), jnp.asarray(ks), jnp.asarray(vc),
+            jnp.asarray(vs), c["k_tail"], c["v_tail"], jnp.asarray(t2),
+            c["lens"], n_bits=4, splits=2))
+        np.testing.assert_array_equal(aliased, deep)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end scheduler parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smollm_setup():
+    cfg = get_smoke("smollm_135m").replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 8, 3, 12, 7, 9)]
+    return cfg, params, prompts
+
+
+def _run_sched(cfg, params, prompts, max_new, **kw):
+    kw2 = dict(max_slots=2, max_len=64, buckets=(8, 16), tick_steps=4,
+               paged=True, page_len=8, prefix_cache=True)
+    kw2.update(kw)
+    sched = ServeScheduler(cfg, params, **kw2)
+    for p in prompts:
+        sched.submit(p, max_new=max_new)
+    return sched, [r.tokens for r in sched.run()]
+
+
+class TestSchedulerQuantParity:
+    def test_gather_vs_kernel_tokens_equal(self, smollm_setup):
+        """The fused quant kernel serves the same tokens as the dequant
+        gather path — both read identical bytes (codes, scales, ring), so
+        agreement is the dense suite's empirical per-seed bar."""
+        cfg, params, prompts = smollm_setup
+        _, gather = _run_sched(cfg, params, prompts, 7, kv_quant=True)
+        for splits in (1, 2):
+            _, kern = _run_sched(cfg, params, prompts, 7, kv_quant=True,
+                                 attn_kernel=True, attn_splits=splits)
+            assert gather == kern
+
+    def test_deterministic_and_page_len_lattice(self, smollm_setup):
+        """Quant serving is deterministic, and every page_len geometry
+        (1-token pages, small, default) serves full-length results."""
+        cfg, params, prompts = smollm_setup
+        for pl in (1, 4, 8):
+            _, a = _run_sched(cfg, params, prompts, 5, kv_quant=True,
+                              page_len=pl)
+            _, b = _run_sched(cfg, params, prompts, 5, kv_quant=True,
+                              page_len=pl)
+            assert a == b and all(len(t) == 5 for t in a)
+
+    def test_kv_bits_widths_serve(self, smollm_setup):
+        cfg, params, prompts = smollm_setup
+        for nb in (2, 8):
+            _, out = _run_sched(cfg, params, prompts[:3], 4, kv_quant=True,
+                                kv_bits=nb, page_len=4)
+            assert all(len(t) == 4 for t in out)
+
+    def test_prefix_hit_reproduces_miss_tokens(self, smollm_setup):
+        """An exact-repeat prompt served off the prefix cache (aliased
+        quant pages + tail-ring restore from dequantized codes) produces
+        the same tokens as its miss-path twin — tested seed."""
+        cfg, params, _ = smollm_setup
+        rng = np.random.default_rng(1)
+        base = rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+        prompts = [base, np.concatenate([base, [5, 7]]), base.copy(),
+                   np.concatenate([base, [9]])]
+        sched, out = _run_sched(cfg, params, prompts, 6, kv_quant=True,
+                                page_len=4)
+        assert out[0] == out[2]
+        assert sched.prefix_cache_stats()["lookup_hits"] >= 2
+        _, kern = _run_sched(cfg, params, prompts, 6, kv_quant=True,
+                             page_len=4, attn_kernel=True, attn_splits=2)
+        assert out == kern
+
+    def test_cow_partial_page_hit(self, smollm_setup):
+        """A prefix ending mid-page: the hit COWs the donor's partial
+        quantized page — codes and scale move together — and the tail ring
+        is restored from the copied page's dequantized rows."""
+        cfg, params, _ = smollm_setup
+        rng = np.random.default_rng(4)
+        prefix = rng.integers(0, cfg.vocab_size, size=28).astype(np.int32)
+        prompts = [np.concatenate([prefix,
+                                   rng.integers(0, cfg.vocab_size,
+                                                size=t).astype(np.int32)])
+                   for t in (6, 5, 4)]
+        kw = dict(max_slots=1, buckets=(8, 16, 32), chunked="auto",
+                  kv_quant=True)
+        sched, out = _run_sched(cfg, params, prompts, 7, **kw)
+        st = sched.prefix_cache_stats()
+        assert st["cached_tokens"] == 2 * 28, st   # 24 whole-page + 4 COW
+        _, again = _run_sched(cfg, params, prompts, 7, **kw)
+        assert out == again
+        _, kern = _run_sched(cfg, params, prompts, 7, attn_kernel=True,
+                             attn_splits=2, **kw)
+        assert out == kern
+
+    def test_gqa_tokens_gather_vs_kernel(self):
+        cfg = get_smoke("qwen3_32b").replace(dtype=jnp.float32)
+        params = init_params(jax.random.PRNGKey(1), cfg)
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in (4, 11, 6)]
+        _, gather = _run_sched(cfg, params, prompts, 5, kv_quant=True)
+        _, kern = _run_sched(cfg, params, prompts, 5, kv_quant=True,
+                             attn_kernel=True, attn_splits=2)
+        assert gather == kern
+
+    def test_ssm_arch_is_bit_equal_noop(self):
+        """A pure-SSM model has no KV pages — kv_quant must be an exact
+        no-op: tokens bit-equal to per-request greedy_generate, snapshot
+        prefix hits included."""
+        cfg = get_smoke("mamba2_780m").replace(dtype=jnp.float32)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(5)
+        prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+        prompts = [np.concatenate([prefix,
+                                   rng.integers(0, cfg.vocab_size,
+                                                size=t).astype(np.int32)])
+                   for t in (5, 4, 6)]
+        sched, out = _run_sched(cfg, params, prompts, 6, max_slots=1,
+                                buckets=(8, 16, 32), tick_steps=3,
+                                chunked="always", chunk_len=8, kv_quant=True)
+        for tokens, p in zip(out, prompts):
+            np.testing.assert_array_equal(
+                np.asarray(tokens),
+                np.asarray(engine.greedy_generate(
+                    cfg, params, jnp.asarray(p)[None], max_new=6))[0])
+        assert sched.prefix_cache_stats()["lookup_hits"] == 2
+
+    def test_hybrid_snapshot_restore(self):
+        """Hybrid (mamba + attn): snapshot hits restore the SSM state AND
+        the quantized KV tail ring; repeats reproduce and hits fire."""
+        cfg = get_smoke("jamba_v01_52b").replace(dtype=jnp.float32)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(5)
+        prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+        prompts = [np.concatenate([prefix,
+                                   rng.integers(0, cfg.vocab_size,
+                                                size=t).astype(np.int32)])
+                   for t in (5, 4, 6)]
+        kw = dict(max_slots=1, buckets=(8, 16, 32), tick_steps=3,
+                  chunked="always", chunk_len=8, kv_quant=True)
+        sched, out = _run_sched(cfg, params, prompts, 6, **kw)
+        assert sched.prefix_cache_stats()["lookup_hits"] == 2
+        _, again = _run_sched(cfg, params, prompts, 6, **kw)
+        assert out == again
+
+    def test_constructor_validation(self, smollm_setup):
+        cfg, params, _ = smollm_setup
+        with pytest.raises(ValueError, match="requires paged"):
+            ServeScheduler(cfg, params, max_slots=2, max_len=64, buckets=(8,),
+                           kv_quant=True)
+        with pytest.raises(ValueError, match="kv_bits"):
+            ServeScheduler(cfg, params, max_slots=2, max_len=64, buckets=(8,),
+                           paged=True, page_len=8, kv_quant=True, kv_bits=1)
+        with pytest.raises(ValueError, match="kv_bits"):
+            ServeScheduler(cfg, params, max_slots=2, max_len=64, buckets=(8,),
+                           paged=True, page_len=8, kv_quant=True, kv_bits=9)
+
+
+_SHARDED_BODY = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.serving.scheduler import ServeScheduler
+from repro.launch.mesh import make_serve_mesh
+
+cfg = get_smoke("smollm_135m").replace(dtype=jnp.float32)
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+           for n in (5, 12, 3, 9, 30)]
+
+def run(mesh, **kw):
+    sched = ServeScheduler(cfg, params, max_slots=2, max_len=64,
+                           buckets=(8, 16), tick_steps=4, mesh=mesh,
+                           paged=True, page_len=8, prefix_cache=True,
+                           chunked="auto", kv_quant=True, **kw)
+    for p in prompts:
+        sched.submit(p, max_new=8)
+    res = sched.run()
+    assert all(r.finish_reason == "length" for r in res), res
+    return [r.tokens for r in res]
+
+base = run(None)
+assert run(None, attn_kernel=True, attn_splits=2) == base
+for spec in ("2x2", "4x1"):
+    assert run(make_serve_mesh(spec)) == base, spec
+    assert run(make_serve_mesh(spec), attn_kernel=True,
+               attn_splits=2) == base, spec
+    print("kv_quant", spec, "BIT-EQUAL")
+print("ok")
+"""
+
+
+class TestShardedQuantScheduler:
+    """Quantized pools under a mesh: codes/scales sharded pages-on-data,
+    tail rings batch-on-data (launch.shardings.cache_shardings) — tokens
+    bit-equal to the single-device quant scheduler, gather + kernel,
+    chunked ingestion and prefix hits included."""
+
+    def test_bit_equal_2x2_and_4x1(self):
+        src = ("import os\n"
+               "os.environ['XLA_FLAGS'] = "
+               "'--xla_force_host_platform_device_count=8'\n"
+               + textwrap.dedent(_SHARDED_BODY))
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run([sys.executable, "-c", src],
+                             capture_output=True, text=True, timeout=560,
+                             env=env, cwd=REPO)
+        assert out.returncode == 0, \
+            f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+        assert out.stdout.count("BIT-EQUAL") == 2 and "ok" in out.stdout

@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.serving.kvpool import (TRASH_PAGE, PagePool, RadixCache,
-                                  blocks_for_tokens)
+                                  blocks_for_tokens, page_kv_bytes,
+                                  tail_ring_bytes)
 
 
 class TestPagePool:
@@ -72,6 +73,44 @@ class TestPagePool:
         assert blocks_for_tokens(8, 8) == 1
         assert blocks_for_tokens(9, 8) == 2             # page_len ∤ length
         assert blocks_for_tokens(17, 8) == 3
+
+
+class TestPoolByteModel:
+    """Pure-arithmetic device-byte model for dense vs log2-quantized pages
+    (ISSUE 9): these numbers feed the EXACT-gated rows of ``serve_bench
+    --kv-quant`` — pin them here so a silent layout change trips a test
+    before it corrupts a baseline."""
+
+    def test_dense_page_bytes(self):
+        # page_len=4, 1 kv head, 16 dims, f32: 2 dirs * 4*1*16 * 4B
+        assert page_kv_bytes(4, 1, 16) == 512
+        assert page_kv_bytes(4, 1, 16, layers=3) == 3 * 512
+        assert page_kv_bytes(4, 1, 16, dtype_bytes=2) == 256   # bf16 pool
+
+    def test_quant_page_bytes(self):
+        # 4-bit: 1 code byte per element + one int32 scale per (page, head)
+        assert page_kv_bytes(4, 1, 16, quant=True) == 2 * (64 + 4)
+        # 8-bit codes widen to int16
+        assert page_kv_bytes(4, 1, 16, quant=True, kv_bits=8) \
+            == 2 * (128 + 4)
+        # kv_bits 2..7 all pack into the same 1-byte container
+        assert page_kv_bytes(4, 1, 16, quant=True, kv_bits=2) \
+            == page_kv_bytes(4, 1, 16, quant=True, kv_bits=7)
+
+    def test_quant_saving_at_least_2x_f32(self):
+        """The ISSUE 9 acceptance floor: sub-8-bit pages cut f32 pool bytes
+        by >= 2x for every realistic geometry (scale overhead included)."""
+        for pl in (4, 8, 16):
+            for g, d in ((1, 16), (2, 64), (8, 128)):
+                dense = page_kv_bytes(pl, g, d, layers=3)
+                quant = page_kv_bytes(pl, g, d, layers=3, quant=True)
+                assert dense / quant >= 2.0, (pl, g, d)
+
+    def test_tail_ring_bytes(self):
+        # 2*page_len + 1 dense f32 rows per direction per layer
+        assert tail_ring_bytes(4, 1, 16) == 2 * 9 * 16 * 4
+        assert tail_ring_bytes(8, 2, 8, layers=2, dtype_bytes=2) \
+            == 2 * 2 * 17 * 2 * 8 * 2
 
 
 def _prompt(rng, n, vocab=100):
