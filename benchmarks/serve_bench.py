@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import subprocess
 import sys
@@ -179,6 +180,7 @@ def serve_bench(arch: str = "smollm_135m", n_requests: int = 24,
     from repro.models import init_params
     from repro.models.quantize import quantize_model_params
     from repro.serving import engine
+    from repro.serving.config import ServeConfig
     from repro.serving.scheduler import ServeScheduler, bucket_for
 
     cfg = get_smoke(arch).replace(dtype=jnp.float32)
@@ -210,9 +212,10 @@ def serve_bench(arch: str = "smollm_135m", n_requests: int = 24,
                  total_tokens / t_serial, nan))
 
     # --- continuous-batching scheduler, float ------------------------------
-    sched = ServeScheduler(cfg, params, max_slots=max_slots,
-                           max_len=pool_len, buckets=buckets,
-                           tick_steps=tick_steps)
+    sched = ServeScheduler(cfg, params,
+                           ServeConfig(max_slots=max_slots, max_len=pool_len,
+                                       buckets=buckets,
+                                       tick_steps=tick_steps))
     _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size), max_new)
     results, t_sched, ticks = _run_scheduler(sched, trace, max_new)
     got = sum(len(r.tokens) for r in results[-n_requests:])
@@ -227,10 +230,11 @@ def serve_bench(arch: str = "smollm_135m", n_requests: int = 24,
 
     # --- quantized pass with per-request traffic stats ---------------------
     qparams = quantize_model_params(cfg, params)
-    qsched = ServeScheduler(cfg, qparams, max_slots=max_slots,
-                            max_len=pool_len, buckets=buckets,
-                            quant="xla", with_stats=True,
-                            tick_steps=tick_steps)
+    qsched = ServeScheduler(cfg, qparams,
+                            ServeConfig(max_slots=max_slots,
+                                        max_len=pool_len, buckets=buckets,
+                                        quant="xla", with_stats=True,
+                                        tick_steps=tick_steps))
     _run_scheduler(qsched, _warm_trace(rng, buckets, cfg.vocab_size),
                    max_new)
     qresults, t_q, _ = _run_scheduler(qsched, trace, max_new)
@@ -261,6 +265,7 @@ def serve_bench_chunked(arch: str = "smollm_135m", n_requests: int = 24,
 
     from repro.configs import get_smoke
     from repro.models import init_params
+    from repro.serving.config import ServeConfig
     from repro.serving.scheduler import ServeScheduler, round_pool_len
 
     cfg = get_smoke(arch).replace(dtype=jnp.float32)
@@ -285,9 +290,10 @@ def serve_bench_chunked(arch: str = "smollm_135m", n_requests: int = 24,
     warm = _warm_trace(rng, buckets, cfg.vocab_size)
     p95 = {}
     for label, kw in (("mono", {}), ("chunked", {"chunked": "always"})):
-        sched = ServeScheduler(cfg, params, max_slots=max_slots,
-                               max_len=pool_len, buckets=buckets,
-                               tick_steps=tick_steps, **kw)
+        sched = ServeScheduler(cfg, params,
+                               ServeConfig(max_slots=max_slots,
+                                           max_len=pool_len, buckets=buckets,
+                                           tick_steps=tick_steps, **kw))
         _run_scheduler(sched, warm, max_new)
         results, t, ticks = _run_scheduler(sched, mix, max_new)
         results = results[-n_requests:]
@@ -307,9 +313,11 @@ def serve_bench_chunked(arch: str = "smollm_135m", n_requests: int = 24,
                                                       long_max + 1)),
                                 ).astype(np.int32))
              for _ in range(max(2, n_requests // 3))]
-    sched = ServeScheduler(cfg, params, max_slots=max_slots,
-                           max_len=pool_len, buckets=buckets,
-                           tick_steps=tick_steps, chunked="auto")
+    sched = ServeScheduler(cfg, params,
+                           ServeConfig(max_slots=max_slots, max_len=pool_len,
+                                       buckets=buckets,
+                                       tick_steps=tick_steps,
+                                       chunked="auto"))
     _run_scheduler(sched, warm + longs[:1], max_new)
     results, t, ticks = _run_scheduler(sched, longs, max_new)
     results = results[-len(longs):]
@@ -347,6 +355,7 @@ def serve_bench_prefix(arch: str = "smollm_135m", n_requests: int = 24,
 
     from repro.configs import get_smoke
     from repro.models import init_params
+    from repro.serving.config import ServeConfig
     from repro.serving.scheduler import ServeScheduler, round_pool_len
 
     cfg = get_smoke(arch).replace(dtype=jnp.float32)
@@ -367,9 +376,10 @@ def serve_bench_prefix(arch: str = "smollm_135m", n_requests: int = 24,
                       ("paged", dict(paged=True, page_len=page_len,
                                      prefix_cache=True, chunked="auto",
                                      chunk_len=page_len))):
-        sched = ServeScheduler(cfg, params, max_slots=max_slots,
-                               max_len=pool_len, buckets=buckets,
-                               tick_steps=tick_steps, **kw)
+        sched = ServeScheduler(cfg, params,
+                               ServeConfig(max_slots=max_slots,
+                                           max_len=pool_len, buckets=buckets,
+                                           tick_steps=tick_steps, **kw))
         _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size),
                        max_new)
         if label == "paged":
@@ -441,6 +451,7 @@ def serve_bench_kv_quant(arch: str = "smollm_135m", n_requests: int = 16,
 
     from repro.configs import get_smoke
     from repro.models import init_params
+    from repro.serving.config import ServeConfig
     from repro.serving.kvpool import (blocks_for_tokens, page_kv_bytes,
                                       tail_ring_bytes)
     from repro.serving.scheduler import ServeScheduler, round_pool_len
@@ -457,11 +468,13 @@ def serve_bench_kv_quant(arch: str = "smollm_135m", n_requests: int = 16,
     tok_s = {}
     for label, kw in (("dense", {}),
                       ("quant", dict(kv_quant=True, kv_bits=kv_bits))):
-        sched = ServeScheduler(cfg, params, max_slots=max_slots,
-                               max_len=pool_len, buckets=buckets,
-                               tick_steps=tick_steps, paged=True,
-                               page_len=page_len, attn_kernel=True,
-                               attn_splits=2, **kw)
+        sched = ServeScheduler(cfg, params,
+                               ServeConfig(max_slots=max_slots,
+                                           max_len=pool_len, buckets=buckets,
+                                           tick_steps=tick_steps, paged=True,
+                                           page_len=page_len,
+                                           attn_kernel=True,
+                                           attn_splits=2, **kw))
         _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size),
                        max_new)
         results, t, ticks = _run_scheduler(sched, trace, max_new)
@@ -555,20 +568,26 @@ def _sharded_child(arch: str, n_requests: int, max_slots: int,
                                 buckets[0])
     for label, mesh in (("single", None),
                         (mesh_spec, make_serve_mesh(mesh_spec))):
+        from repro.serving.config import ServeConfig
         from repro.serving.scheduler import ServeScheduler
-        sched = ServeScheduler(cfg, params, max_slots=max_slots,
-                               max_len=pool_len, buckets=buckets,
-                               tick_steps=tick_steps, mesh=mesh)
+        sched = ServeScheduler(cfg, params,
+                               ServeConfig(max_slots=max_slots,
+                                           max_len=pool_len, buckets=buckets,
+                                           tick_steps=tick_steps),
+                               mesh=mesh)
         _run_scheduler(sched, _warm_trace(rng, buckets, cfg.vocab_size),
                        max_new)
         results, t, _ = _run_scheduler(sched, trace, max_new)
         tokens[label] = [r.tokens for r in results[-n_requests:]]
         rows.append((f"serve.{cfg.name}.sharded[{label}].tok_s",
                      n_requests * max_new / t, float("nan")))
-        csched = ServeScheduler(cfg, params, max_slots=max_slots,
-                                max_len=chunk_pool, buckets=buckets,
-                                tick_steps=tick_steps, mesh=mesh,
-                                chunked="auto")
+        csched = ServeScheduler(cfg, params,
+                                ServeConfig(max_slots=max_slots,
+                                            max_len=chunk_pool,
+                                            buckets=buckets,
+                                            tick_steps=tick_steps,
+                                            chunked="auto"),
+                                mesh=mesh)
         cresults, _, _ = _run_scheduler(csched, chunk_trace, max_new)
         assert all(r.finish_reason == "length" for r in cresults), cresults
         chunk_tokens[label] = [r.tokens for r in cresults]
@@ -622,11 +641,117 @@ def serve_bench_sharded(arch: str = "smollm_135m", n_requests: int = 16,
     return rows
 
 
+def serve_bench_disagg(arch: str = "smollm_135m", n_short: int = 12,
+                       n_long: int = 4, max_slots: int = 4,
+                       tick_steps: int = 4, max_new: int = 16,
+                       seed: int = 0, page_len: int = 8,
+                       buckets: Tuple[int, ...] = (8, 16)):
+    """ISSUE 10 A/B: decode saturation + prefill flood, combined scheduler
+    vs the disaggregated prefill/decode router (``serving/router.py``) on
+    the SAME paged config and trace.
+
+    The trace is ``n_short`` short interactive prompts (they keep the
+    decode slots saturated) interleaved with ``n_long`` long prompts at 3x
+    the largest bucket (each floods prefill with chunked ingestion).  In
+    the combined scheduler every long prompt's chunk rides the same jitted
+    mixed tick as the in-flight decodes — the per-tick latency the decode
+    traffic observes inflates.  The router runs the same ingestion on the
+    PREFILL engine; the decode fleet's ticks are pure decode by
+    construction.  Reported: token parity (EXACT-gated — the disaggregated
+    stream must be bit-equal to the combined scheduler), tok/s both ways
+    (advisory), p95 tick latency both ways, and the isolation ratio
+    (combined p95 tick / decode-fleet p95 tick, advisory) — the acceptance
+    claim that a prefill flood does not regress decode tick latency."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    from repro.serving.config import ServeConfig
+    from repro.serving.router import Router
+    from repro.serving.scheduler import ServeScheduler, round_pool_len
+
+    cfg = get_smoke(arch).replace(dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    chunk_len = buckets[0]
+    long_max = 3 * max(buckets)
+    quantum = math.lcm(chunk_len, page_len)
+    config = ServeConfig(max_slots=max_slots,
+                         max_len=round_pool_len(
+                             long_max + max_new + tick_steps, quantum),
+                         buckets=buckets, tick_steps=tick_steps,
+                         chunked="auto", chunk_len=chunk_len,
+                         paged=True, page_len=page_len)
+    # interleave: every (short, short, long) group keeps decodes live
+    # while a long prompt floods prefill
+    trace, li = [], 0
+    for i in range(n_short + n_long):
+        if n_long and i % ((n_short + n_long) // n_long) == 2 and li < n_long:
+            n = long_max
+            li += 1
+        else:
+            n = int(rng.integers(4, max(buckets) + 1))
+        trace.append((0.0, rng.integers(0, cfg.vocab_size,
+                                        size=n).astype(np.int32)))
+    warm = _warm_trace(rng, buckets, cfg.vocab_size) + [
+        (0.0, rng.integers(0, cfg.vocab_size,
+                           size=long_max).astype(np.int32))]
+    nan = float("nan")
+    rows = []
+
+    # --- combined: chunk ingestion and decode share every tick ------------
+    sched = ServeScheduler(cfg, params, config)
+    _run_scheduler(sched, warm, max_new)
+    results, t_comb, comb_ticks = _run_scheduler(sched, trace, max_new)
+    results = results[-len(trace):]
+    total = sum(len(r.tokens) for r in results)
+    rows.append((f"serve.{cfg.name}.disagg[combined].tok_s",
+                 total / t_comb, nan))
+    rows.append((f"serve.{cfg.name}.disagg[combined].tick_p95_ms",
+                 _pct(comb_ticks, 95) * 1e3, nan))
+
+    # --- disaggregated: same config through the router --------------------
+    router = Router(cfg, params, config)
+    for _, prompt in warm:
+        router.submit(prompt, max_new=max_new)
+    router.run()
+    router.decode_tick_times.clear()
+    for _, prompt in trace:
+        router.submit(prompt, max_new=max_new)
+    t0 = time.perf_counter()
+    dresults = router.run()
+    t_dis = time.perf_counter() - t0
+    dtotal = sum(len(r.tokens) for r in dresults)
+    rows.append((f"serve.{cfg.name}.disagg[router].tok_s",
+                 dtotal / t_dis, nan))
+    rows.append((f"serve.{cfg.name}.disagg[decode].tick_p95_ms",
+                 _pct(router.decode_tick_times, 95) * 1e3, nan))
+
+    # token parity: the disaggregated stream must be bit-equal (EXACT gate)
+    equal = (len(results) == len(dresults) and all(
+        a.tokens == b.tokens and a.finish_reason == b.finish_reason
+        for a, b in zip(results, dresults)))
+    rows.append((f"serve.{cfg.name}.disagg.tokens_bit_equal",
+                 float(equal), nan))
+    assert equal, "disaggregated tokens diverged from combined scheduler"
+    # the TTFT-isolation claim: decode-fleet ticks don't pay for prefill
+    rows.append((f"serve.{cfg.name}.disagg.isolation_p95_speedup",
+                 _pct(comb_ticks, 95) / _pct(router.decode_tick_times, 95),
+                 nan))
+    lat, recs = _latency_rows(f"serve.{cfg.name}.disagg[router]",
+                              dresults, router.decode_tick_times)
+    rows += lat
+    _emit_json("serve_disagg", rows, recs)
+    return rows
+
+
 ALL_SERVE_BENCHES = {"serve": serve_bench,
                      "serve_chunked": serve_bench_chunked,
                      "serve_paged": serve_bench_prefix,
                      "serve_kv_quant": serve_bench_kv_quant,
-                     "serve_sharded": serve_bench_sharded}
+                     "serve_sharded": serve_bench_sharded,
+                     "serve_disagg": serve_bench_disagg}
 
 
 def main(argv=None) -> None:
@@ -662,6 +787,10 @@ def main(argv=None) -> None:
                          "divergence, EXACT-gated pool-byte savings)")
     ap.add_argument("--kv-bits", type=int, default=4,
                     help="wire exponent bits for --kv-quant")
+    ap.add_argument("--disaggregated", action="store_true",
+                    help="run the disaggregated A/B (combined scheduler vs "
+                         "prefill/decode router: token parity EXACT, decode "
+                         "tick-latency isolation under prefill flood)")
     ap.add_argument("--sharded", action="store_true",
                     help="run the mesh-sharded variant (subprocess with "
                          "forced host devices)")
@@ -682,6 +811,17 @@ def main(argv=None) -> None:
         rows = _sharded_child(args.arch, args.requests, args.max_slots,
                               args.tick_steps, args.new_tokens, args.seed,
                               buckets, args.mesh)
+    elif args.dry and args.disaggregated:
+        # the multidevice-CI smoke: ONLY the tiny disaggregated A/B (the
+        # full --dry suite runs it too, alongside everything else)
+        rows = serve_bench_disagg(args.arch, n_short=4, n_long=2,
+                                  max_slots=2, tick_steps=2, max_new=4,
+                                  seed=args.seed, page_len=8,
+                                  buckets=(8, 16))
+        names = [n for n, _, _ in rows]
+        for want in ("disagg.tokens_bit_equal",
+                     "disagg.isolation_p95_speedup"):
+            assert any(want in n for n in names), (want, names)
     elif args.dry:
         rows = serve_bench(args.arch, n_requests=4, max_slots=2,
                            tick_steps=2, max_new=4, rate=args.rate,
@@ -701,6 +841,10 @@ def main(argv=None) -> None:
                                     tick_steps=2, max_new=4, seed=args.seed,
                                     buckets=(8, 16), mesh_spec=args.mesh,
                                     devices=args.devices)
+        rows += serve_bench_disagg(args.arch, n_short=4, n_long=2,
+                                   max_slots=2, tick_steps=2, max_new=4,
+                                   seed=args.seed, page_len=8,
+                                   buckets=(8, 16))
         # the --dry contract: the latency satellites exist in the emitted
         # rows (CI drift check for the TTFT/p95 reporting)
         names = [n for n, _, _ in rows]
@@ -709,7 +853,9 @@ def main(argv=None) -> None:
                      "long.served_frac", "chunked_bit_equal",
                      "prefix.hit_rate", "prefix.cache_write_saved_frac",
                      "kvq.token_bit_equal_frac", "kvq.pool_bytes_saved_frac",
-                     "kvq.pool_bytes_reduction_x"):
+                     "kvq.pool_bytes_reduction_x",
+                     "disagg.tokens_bit_equal",
+                     "disagg.isolation_p95_speedup"):
             assert any(want in n for n in names), (want, names)
         # prefix-cache smoke: the shared-prefix trace must actually HIT
         hits = [v for n, v, _ in rows if n.endswith("prefix.lookup_hits")]
@@ -733,6 +879,14 @@ def main(argv=None) -> None:
                                     tick_steps=args.tick_steps,
                                     max_new=args.new_tokens, seed=args.seed,
                                     kv_bits=args.kv_bits)
+    elif args.disaggregated:
+        rows = serve_bench_disagg(args.arch,
+                                  n_short=max(2, args.requests * 3 // 4),
+                                  n_long=max(1, args.requests // 4),
+                                  max_slots=args.max_slots,
+                                  tick_steps=args.tick_steps,
+                                  max_new=args.new_tokens, seed=args.seed,
+                                  page_len=args.page_len)
     elif args.sharded:
         rows = serve_bench_sharded(args.arch, n_requests=args.requests,
                                    max_slots=args.max_slots,

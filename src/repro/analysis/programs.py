@@ -67,6 +67,35 @@ class Variant:
         d, m = self.mesh_spec.split("x")
         return int(d) * int(m)
 
+    def serve_config(self):
+        """This variant's scheduler knobs as ONE ``ServeConfig`` — the
+        single source of truth the auditor builds from (the hand-kept
+        per-mode kwarg dicts this replaced could silently drift from
+        what production construction validates)."""
+        from repro.serving.config import ServeConfig
+
+        kw = dict(
+            max_slots=AUDIT_SLOTS,
+            max_len=AUDIT_MAX_LEN,
+            buckets=AUDIT_BUCKETS,
+            quant=self.quant,
+            tick_steps=AUDIT_TICK_STEPS,
+            mesh_spec=self.mesh_spec,
+        )
+        if self.mode == "chunked":
+            kw.update(chunked="always", chunk_len=AUDIT_CHUNK_LEN)
+        elif self.paged:
+            kw.update(
+                paged=True,
+                page_len=AUDIT_PAGE_LEN,
+                n_pages=AUDIT_N_PAGES,
+                prefix_cache=True,
+                chunked="auto",
+                chunk_len=AUDIT_CHUNK_LEN,
+                attn_kernel=self.attn_kernel,
+            )
+        return ServeConfig(**kw)
+
 
 def variant_matrix(mesh_specs: Sequence[Optional[str]] = (None, "2x2")) -> List[Variant]:
     """The full registry, single-device variants first (cheapest to trace)."""
@@ -101,32 +130,9 @@ def build_scheduler(variant: Variant, cfg=None, params=None):
         cfg, params = audit_model()
     if variant.quant:
         params = quantize_model_params(cfg, params)
-    mesh = None
-    if variant.mesh_spec:
-        from repro.launch.mesh import make_serve_mesh
-
-        mesh = make_serve_mesh(variant.mesh_spec)
-    kw = dict(
-        max_slots=AUDIT_SLOTS,
-        max_len=AUDIT_MAX_LEN,
-        buckets=AUDIT_BUCKETS,
-        quant=variant.quant,
-        tick_steps=AUDIT_TICK_STEPS,
-        mesh=mesh,
-    )
-    if variant.mode == "chunked":
-        kw.update(chunked="always", chunk_len=AUDIT_CHUNK_LEN)
-    elif variant.paged:
-        kw.update(
-            paged=True,
-            page_len=AUDIT_PAGE_LEN,
-            n_pages=AUDIT_N_PAGES,
-            prefix_cache=True,
-            chunked="auto",
-            chunk_len=AUDIT_CHUNK_LEN,
-            attn_kernel=variant.attn_kernel,
-        )
-    return ServeScheduler(cfg, params, **kw)
+    # the config carries the mesh BY SPEC; the scheduler resolves it to
+    # live devices in this process (ServeConfig.make_mesh)
+    return ServeScheduler(cfg, params, variant.serve_config())
 
 
 # ---------------------------------------------------------------------------

@@ -99,18 +99,21 @@ def run_recompile_audit() -> Tuple[List[Finding], Dict[str, int]]:
         audit_model,
     )
     from repro.serving import engine
+    from repro.serving.config import ServeConfig
     from repro.serving.scheduler import ServeScheduler
 
     cfg, params = audit_model()
     sched = ServeScheduler(
         cfg,
         params,
-        max_slots=AUDIT_SLOTS,
-        max_len=AUDIT_MAX_LEN,
-        buckets=AUDIT_BUCKETS,
-        tick_steps=AUDIT_TICK_STEPS,
-        chunked="auto",
-        chunk_len=AUDIT_CHUNK_LEN,
+        ServeConfig(
+            max_slots=AUDIT_SLOTS,
+            max_len=AUDIT_MAX_LEN,
+            buckets=AUDIT_BUCKETS,
+            tick_steps=AUDIT_TICK_STEPS,
+            chunked="auto",
+            chunk_len=AUDIT_CHUNK_LEN,
+        ),
     )
     findings: List[Finding] = []
 

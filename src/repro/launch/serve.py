@@ -50,19 +50,18 @@ from repro.models.sharding import mesh_axes
 from repro.serving.engine import make_decode_loop, make_prefill_step
 
 
-def _serve_continuous(cfg, params, args, mesh):
-    """Queued-trace continuous batching: submit everything, drain, report
-    sustained tok/s + per-request latency + plane traffic.
+def build_serve_config(args):
+    """Pure flags -> :class:`~repro.serving.config.ServeConfig` mapping
+    for ``--continuous`` serving.  No jax state is touched: the same
+    flags always produce the same config, and ``--dump-config`` commits
+    exactly what this returns (round-trip tested).  The mesh is the one
+    deliberate exclusion — device binding is process-local, so the
+    launcher resolves ``--mesh`` itself and passes the live mesh
+    alongside the config (``ServeConfig.mesh_spec`` stays for configs
+    authored by hand)."""
+    from repro.serving.config import ServeConfig
+    from repro.serving.scheduler import round_pool_len
 
-    With ``--chunked`` the trace includes LONG prompts (up to 3x
-    ``--prompt-len``, past every prefill bucket) — rejected outright without
-    chunking — ingested ``--chunk-len`` tokens per tick, interleaved with
-    decode."""
-    import numpy as np
-
-    from repro.serving.scheduler import ServeScheduler, round_pool_len
-
-    quant = args.quant_backend if args.quant else False
     buckets = tuple(sorted({8, 16, max(8, args.prompt_len)}))
     chunked = args.chunked or "off"
     chunk_len = args.chunk_len or 8
@@ -74,27 +73,68 @@ def _serve_continuous(cfg, params, args, mesh):
     if chunked != "off" or args.prefix_cache:
         quantum = chunk_len
     kv_quant = args.kv_quant is not None
-    if args.paged or args.prefix_cache or args.attn_kernel or kv_quant:
+    paged = bool(args.paged or args.prefix_cache or args.attn_kernel
+                 or kv_quant)
+    if paged:
         quantum = math.lcm(quantum, args.page_len)
     if quantum > 1:
         pool = round_pool_len(pool, quantum)
-    sched = ServeScheduler(
-        cfg, params, max_slots=args.max_slots, max_len=pool,
-        buckets=buckets, quant=quant, with_stats=args.quant,
-        tick_steps=args.tick_steps, chunked=chunked, chunk_len=chunk_len,
-        paged=(args.paged or args.prefix_cache or args.attn_kernel
-               or kv_quant),
-        page_len=args.page_len,
-        prefix_cache=args.prefix_cache, attn_kernel=args.attn_kernel,
+    return ServeConfig(
+        max_slots=args.max_slots, max_len=pool, buckets=buckets,
+        quant=args.quant_backend if args.quant else False,
+        with_stats=args.quant, tick_steps=args.tick_steps,
+        chunked=chunked, chunk_len=chunk_len, paged=paged,
+        page_len=args.page_len, prefix_cache=args.prefix_cache,
+        attn_kernel="pallas" if args.attn_kernel else "off",
         attn_splits=args.attn_splits,
-        kv_quant=kv_quant, kv_bits=args.kv_quant or 4,
-        mesh=mesh if mesh is not None and mesh.size > 1 else None)
+        kv_quant=kv_quant, kv_bits=args.kv_quant or 4)
+
+
+def _load_serve_config(args):
+    """The serving config for this invocation: ``--config path.json`` if
+    given (the committed-file workflow), else derived from the flags."""
+    from repro.serving.config import ServeConfig
+
+    if args.config is None:
+        return build_serve_config(args)
+    with open(args.config) as fh:
+        return ServeConfig.from_json(fh.read())
+
+
+def _serve_continuous(cfg, params, args, mesh):
+    """Queued-trace continuous batching: submit everything, drain, report
+    sustained tok/s + per-request latency + plane traffic.
+
+    With ``--chunked`` the trace includes LONG prompts (up to 3x
+    ``--prompt-len``, past every prefill bucket) — rejected outright without
+    chunking — ingested ``--chunk-len`` tokens per tick, interleaved with
+    decode.  ``--disaggregate`` serves the same trace through the
+    prefill/decode router (``serving/router.py``) instead of the combined
+    scheduler — identical tokens, isolated decode ticks."""
+    import numpy as np
+
+    from repro.serving.router import Router
+    from repro.serving.scheduler import ServeScheduler
+
+    config = _load_serve_config(args)
+    buckets = config.buckets
+    chunked = config.chunked
+    long_max = ((3 * args.prompt_len) if chunked != "off"
+                else args.prompt_len)
+    live_mesh = mesh if mesh is not None and mesh.size > 1 else None
+    if args.disaggregate:
+        if not config.paged:
+            raise SystemExit("--disaggregate requires a paged config "
+                             "(add --paged, or paged=true in --config)")
+        sched = Router(cfg, params, config, mesh=live_mesh)
+    else:
+        sched = ServeScheduler(cfg, params, config, mesh=live_mesh)
     rng = np.random.default_rng(args.seed)
     # with a prefix cache, draw a shared-system-prompt workload (half the
     # prompt is a common prefix) so the radix tree has something to hit
     prefix = (rng.integers(0, cfg.vocab_size, size=max(args.prompt_len // 2,
-                                                       args.page_len))
-              .astype(np.int32) if args.prefix_cache else None)
+                                                       config.page_len))
+              .astype(np.int32) if config.prefix_cache else None)
     for _ in range(args.requests):
         n = int(rng.integers(2, long_max + 1))
         p = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
@@ -105,22 +145,36 @@ def _serve_continuous(cfg, params, args, mesh):
     results = sched.run()
     dt = time.perf_counter() - t0
     total = sum(len(r.tokens) for r in results)
-    mesh_tag = ("1-device" if sched.mesh is None else
-                "x".join(str(s) for s in sched.mesh.devices.shape) + " mesh")
+    mesh_tag = ("1-device" if live_mesh is None else
+                "x".join(str(s) for s in live_mesh.devices.shape) + " mesh")
     chunk_tag = ("" if chunked == "off"
-                 else f", chunked={chunked}/{sched.chunk_len}")
-    if sched.paged:
-        chunk_tag += (f", paged/{sched.page_len}"
-                      + ("+prefix" if sched.prefix_cache else "")
-                      + (f"+kernel/s{sched.attn_splits}"
-                         if sched.attn_kernel != "off" else "")
-                      + (f"+kvq/{sched.kv_bits}b" if sched.kv_quant
+                 else f", chunked={chunked}/{config.chunk_len}")
+    if config.paged:
+        chunk_tag += (f", paged/{config.page_len}"
+                      + ("+prefix" if config.prefix_cache else "")
+                      + (f"+kernel/s{config.attn_splits}"
+                         if config.attn_kernel != "off" else "")
+                      + (f"+kvq/{config.kv_bits}b" if config.kv_quant
                          else ""))
-    print(f"[serve] {cfg.name}: continuous batching ({mesh_tag}{chunk_tag}) "
-          f"— {len(results)} requests, {sched.max_slots} slots, "
-          f"tick={sched.tick_steps}: "
+    if args.disaggregate:
+        mode_tag = "disaggregated"
+        compile_stats = {"prefill": sched.prefill.scheduler.compile_stats(),
+                         "decode": sched.decode.scheduler.compile_stats()}
+        stats_sched = sched.prefill.scheduler
+    else:
+        mode_tag = "continuous batching"
+        compile_stats = sched.compile_stats()
+        stats_sched = sched
+    print(f"[serve] {cfg.name}: {mode_tag} ({mesh_tag}{chunk_tag}) "
+          f"— {len(results)} requests, {config.max_slots} slots, "
+          f"tick={config.tick_steps}: "
           f"{total} tokens in {dt:.3f}s ({total / max(dt, 1e-9):.1f} tok/s "
-          f"incl. compile); programs: {sched.compile_stats()}")
+          f"incl. compile); programs: {compile_stats}")
+    if args.disaggregate and sched.decode_tick_times:
+        tt = np.asarray(sched.decode_tick_times) * 1e3
+        print(f"[serve] decode fleet: {len(tt)} isolated ticks, p50/p95 "
+              f"{np.percentile(tt, 50):.1f}/{np.percentile(tt, 95):.1f} ms "
+              f"(prefill work excluded by construction)")
     if not results:
         return
     served = [r for r in results if r.finish_reason != "rejected"]
@@ -142,8 +196,8 @@ def _serve_continuous(cfg, params, args, mesh):
         elem = float(np.mean([r.element_traffic_fraction for r in served]))
         print(f"[serve] per-request plane_traffic_fraction: {tile:.3f} "
               f"tile-granular, {elem:.3f} element-granular")
-    if sched.prefix_cache:
-        st = sched.prefix_cache_stats()
+    if config.prefix_cache:
+        st = stats_sched.prefix_cache_stats()
         print(f"[serve] prefix cache: hit_rate {st['hit_rate']:.3f} "
               f"({int(st['cached_tokens'])}/{int(st['prompt_tokens'])} "
               f"prompt tokens from shared pages, "
@@ -223,7 +277,31 @@ def main(argv=None):
                          "longest shared prompt prefix and prefill only "
                          "the suffix; the trace draws shared-prefix "
                          "prompts to show hits")
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="load the continuous-mode ServeConfig from this "
+                         "JSON file instead of deriving it from the flags "
+                         "(--dump-config writes the derived form)")
+    ap.add_argument("--dump-config", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="print (or write to PATH) the ServeConfig JSON "
+                         "this flag combination derives, then exit — the "
+                         "committed-config workflow's authoring step")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="continuous mode through the disaggregated "
+                         "prefill/decode router (serving/router.py) "
+                         "instead of the combined scheduler: identical "
+                         "tokens, decode ticks isolated from prompt "
+                         "ingestion (requires a paged config)")
     args = ap.parse_args(argv)
+
+    if args.dump_config is not None:
+        text = _load_serve_config(args).to_json(indent=2)
+        if args.dump_config == "-":
+            print(text)
+        else:
+            with open(args.dump_config, "w") as fh:
+                fh.write(text + "\n")
+        return
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.frontend == "audio_stub":

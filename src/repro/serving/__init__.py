@@ -1,3 +1,4 @@
+from repro.serving.config import SCHEMA_VERSION, ServeConfig
 from repro.serving.engine import (clear_generate_cache, generate_fn,
                                   greedy_generate, make_decode_loop,
                                   make_prefill_step, make_serve_step,
@@ -6,12 +7,16 @@ from repro.serving.engine import (clear_generate_cache, generate_fn,
                                   reference_generate, set_generate_cache_size)
 from repro.serving.kvpool import (PagePool, PrefixHit, RadixCache,
                                   blocks_for_tokens)
+from repro.serving.router import Router, run_disaggregated
 from repro.serving.scheduler import (Request, RequestResult, ServeScheduler,
                                      bucket_for, round_pool_len)
+from repro.serving.workers import DecodeEngine, PageSpan, PrefillEngine
 __all__ = ["clear_generate_cache", "generate_fn", "greedy_generate",
            "make_decode_loop", "make_prefill_step", "make_serve_step",
            "make_slot_prefill", "make_slot_prefill_chunk",
            "make_slot_serve_step", "reference_generate",
            "set_generate_cache_size", "PagePool", "PrefixHit",
            "RadixCache", "blocks_for_tokens", "Request", "RequestResult",
-           "ServeScheduler", "bucket_for", "round_pool_len"]
+           "ServeScheduler", "bucket_for", "round_pool_len",
+           "SCHEMA_VERSION", "ServeConfig", "PageSpan", "PrefillEngine",
+           "DecodeEngine", "Router", "run_disaggregated"]

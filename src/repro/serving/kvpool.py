@@ -132,6 +132,30 @@ class PagePool:
     def is_shared(self, page: int) -> bool:
         return self.refcount[page] > 1
 
+    def verify(self) -> None:
+        """Cross-check refcounts against the free list; raises
+        ``ValueError`` on any inconsistency.  Used by the pool-to-pool
+        transplant tests (``serving/workers.py``): after a span export
+        donates/releases prefill-side pages and an import allocates
+        decode-side pages, BOTH pools must still satisfy the invariants
+        — no referenced page on the free list, no leaked page (refcount
+        0 yet unavailable), trash page pinned exactly once."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise ValueError("PagePool.verify: free list has duplicates")
+        if TRASH_PAGE in free or self.refcount[TRASH_PAGE] != 1:
+            raise ValueError("PagePool.verify: trash page not pinned")
+        for p in range(1, self.n_pages):
+            rc = int(self.refcount[p])
+            if rc < 0:
+                raise ValueError(f"PagePool.verify: page {p} refcount {rc}")
+            if p in free and rc != 0:
+                raise ValueError(f"PagePool.verify: page {p} on the free "
+                                 f"list with refcount {rc}")
+            if p not in free and rc == 0:
+                raise ValueError(f"PagePool.verify: page {p} leaked "
+                                 f"(refcount 0 but not on the free list)")
+
 
 @dataclasses.dataclass
 class _Node:
@@ -219,6 +243,29 @@ class RadixCache:
     @property
     def n_pages(self) -> int:
         return sum(1 for _ in self._iter_nodes())
+
+    def verify(self) -> None:
+        """Tree/pool consistency: every resident node holds a live page
+        reference (depth consistent with its parent, snapshot count
+        matching the bound's counter).  Raises ``ValueError`` on any
+        violation — paired with :meth:`PagePool.verify` in the
+        disaggregated transplant tests."""
+        snaps = 0
+        for parent, _, child in self._iter_nodes():
+            if not 0 < child.page < self.pool.n_pages:
+                raise ValueError(f"RadixCache.verify: node page "
+                                 f"{child.page} out of range")
+            if self.pool.refcount[child.page] < 1:
+                raise ValueError(f"RadixCache.verify: node page "
+                                 f"{child.page} has no live reference")
+            if child.depth != parent.depth + 1:
+                raise ValueError(f"RadixCache.verify: node at depth "
+                                 f"{child.depth} under parent depth "
+                                 f"{parent.depth}")
+            snaps += child.snapshot is not None
+        if snaps != self._n_snapshots:
+            raise ValueError(f"RadixCache.verify: {snaps} snapshots in the "
+                             f"tree, counter says {self._n_snapshots}")
 
     def lookup(self, prompt: np.ndarray, *, max_hit: int,
                need_snapshot: bool = False, min_hit: int = 1,

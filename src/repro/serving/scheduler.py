@@ -76,8 +76,9 @@ import collections
 import contextlib
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -85,10 +86,15 @@ import numpy as np
 
 from repro.models.model import ModelConfig, init_caches, init_paged_pool
 from repro.serving import engine
+from repro.serving.config import ServeConfig
 from repro.serving.kvpool import (TRASH_PAGE, PagePool, RadixCache,
                                   blocks_for_tokens)
 
-DEFAULT_BUCKETS: Tuple[int, ...] = (16, 32, 64, 128)
+# the legacy keyword surface: exactly the ServeConfig fields minus
+# mesh_spec (the old signature took a live mesh OBJECT, which stays a
+# first-class scheduler argument — device binding is process-local)
+_LEGACY_KWARGS = frozenset(
+    f.name for f in dataclasses.fields(ServeConfig)) - {"mesh_spec"}
 
 
 def bucket_for(length: int, buckets: Sequence[int]) -> int:
@@ -173,10 +179,15 @@ class ServeScheduler:
 
     Usage::
 
-        sched = ServeScheduler(cfg, params, max_slots=8, max_len=256)
+        sc = ServeConfig(max_slots=8, max_len=256)
+        sched = ServeScheduler(cfg, params, sc)
         for p in prompts:
             sched.submit(p, max_new=32, eos_id=2)
         results = sched.run()          # List[RequestResult], rid order
+
+    The legacy keyword form (``ServeScheduler(cfg, params, max_slots=8,
+    ...)``) still works — it routes through ``ServeConfig`` and emits a
+    ``DeprecationWarning``; every knob below is a ``ServeConfig`` field.
 
     ``chunked="auto"`` (or ``True``) adds chunked prefill: prompts longer
     than the largest bucket — rejected outright without it — are ingested
@@ -204,122 +215,73 @@ class ServeScheduler:
     softmax reassociation — same bar as chunked-vs-bucketed prefill.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *,
-                 max_slots: int = 8,
-                 max_len: int = 256,
-                 buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 quant: engine.QuantFlag = False,
-                 with_stats: bool = False,
-                 tick_steps: int = 8,
-                 generate_cache_size: Optional[int] = None,
-                 mesh=None,
-                 oversize: str = "reject",
-                 chunked="off",
-                 chunk_len: Optional[int] = None,
-                 paged: bool = False,
-                 page_len: int = 16,
-                 n_pages: Optional[int] = None,
-                 prefix_cache: bool = False,
-                 snapshot_limit: int = 8,
-                 min_prefix_hit: Optional[int] = None,
-                 attn_kernel: bool | str = False,
-                 attn_splits: int = 1,
-                 kv_quant: bool = False,
-                 kv_bits: int = 4):
+    def __init__(self, cfg: ModelConfig, params,
+                 config: Optional[ServeConfig] = None, *,
+                 mesh=None, **legacy):
+        """Build from a :class:`ServeConfig` (canonical form) or the
+        legacy keyword surface (deprecated shim: same defaults, same
+        validation — it routes through ``ServeConfig`` — byte-for-byte
+        the same scheduler, plus a ``DeprecationWarning``).  ``mesh=``
+        stays a first-class argument either way: a live mesh is
+        process-local device BINDING, not configuration; when only
+        ``config.mesh_spec`` is set, it resolves here via
+        ``make_serve_mesh``."""
         if cfg.frontend != "none":
             raise ValueError("ServeScheduler serves token-id models only "
                              f"(frontend={cfg.frontend!r})")
-        if max_slots < 1 or tick_steps < 1:
-            raise ValueError("max_slots and tick_steps must be >= 1")
-        if oversize not in ("reject", "truncate", "raise"):
-            raise ValueError(f"oversize={oversize!r}: expected 'reject', "
-                             f"'truncate', or 'raise'")
-        buckets = tuple(sorted(set(int(b) for b in buckets)))
-        if not buckets or buckets[-1] > max_len:
-            raise ValueError(f"buckets {buckets} must be non-empty and fit "
-                             f"max_len={max_len}")
-        if isinstance(chunked, bool):
-            chunked = "auto" if chunked else "off"
-        if chunked not in ("off", "auto", "always"):
-            raise ValueError(f"chunked={chunked!r}: expected 'off', 'auto', "
-                             f"or 'always'")
-        chunk_len = int(buckets[0] if chunk_len is None else chunk_len)
-        paged = bool(paged)
-        prefix_cache = bool(prefix_cache)
-        if prefix_cache and not paged:
-            raise ValueError("prefix_cache=True requires paged=True (prefix "
-                             "hits alias shared pages)")
-        # prefix-hit admissions ingest the prompt SUFFIX through the chunked
-        # path, so the chunk programs exist whenever they might be needed
-        needs_chunk_programs = chunked != "off" or prefix_cache
-        if needs_chunk_programs:
-            if not 1 <= chunk_len <= max_len:
-                raise ValueError(f"chunk_len={chunk_len} must be in "
-                                 f"[1, max_len={max_len}]")
-            if max_len % chunk_len:
-                # guarantees the ceil-aligned last slab of any admissible
-                # prompt ends <= max_len, so per-row slab writes never hit
-                # dynamic_update_slice clamping (which would misalign rows)
-                raise ValueError(f"max_len={max_len} must be a multiple of "
-                                 f"chunk_len={chunk_len}")
+        if config is None:
+            unknown = sorted(set(legacy) - _LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"ServeScheduler: unexpected keyword "
+                                f"arguments {unknown}")
+            if legacy:
+                warnings.warn(
+                    "ServeScheduler(cfg, params, **kwargs) is deprecated: "
+                    "build a serving.ServeConfig and pass it as the third "
+                    "argument — ServeScheduler(cfg, params, serve_config)",
+                    DeprecationWarning, stacklevel=2)
+            config = ServeConfig(**legacy)
+        elif legacy:
+            raise TypeError(f"ServeScheduler: pass EITHER a ServeConfig or "
+                            f"legacy keyword arguments, not both (got a "
+                            f"config plus {sorted(legacy)})")
+        if not isinstance(config, ServeConfig):
+            raise TypeError(f"ServeScheduler: config must be a ServeConfig,"
+                            f" got {type(config).__name__}")
+        if mesh is None:
+            mesh = config.make_mesh()
+        self.serve_config = config
+
+        # unpack the validated knobs into locals (the builder below) and
+        # the long-standing public attributes (benches/tests read these)
+        max_slots = config.max_slots
+        max_len = config.max_len
+        buckets = config.buckets
+        quant = config.quant
+        with_stats = config.with_stats
+        tick_steps = config.tick_steps
+        chunk_len = config.chunk_len
+        paged = config.paged
+        page_len = config.page_len
+        prefix_cache = config.prefix_cache
+        needs_chunk_programs = config.needs_chunk_programs
+        attn_kernel = config.attn_kernel
+        kv_quant = config.kv_quant
+        kv_bits = config.kv_bits
         if paged:
-            page_len = int(page_len)
-            if page_len < 1:
-                raise ValueError(f"page_len={page_len} must be >= 1")
-            if max_len % page_len:
-                # the gathered per-slot view (blocks * page_len) must equal
-                # max_len exactly for dense-slab bit-equality
-                raise ValueError(f"max_len={max_len} must be a multiple of "
-                                 f"page_len={page_len}")
-            max_blocks = max_len // page_len
-            if n_pages is None:
-                # every slot fully resident, plus prefix-cache retention
-                # headroom for one max-size prompt, plus the trash page
-                n_pages = (max_slots * max_blocks + 1
-                           + (max_blocks if prefix_cache else 0))
-                if mesh is not None:
-                    # round up to the data-axis size so the pages-on-data
-                    # sharding actually engages (a non-divisible page dim
-                    # silently replicates the whole pool on every device);
-                    # an EXPLICIT n_pages is the caller's to align
-                    from repro.launch.mesh import batch_axes
-                    nb = 1
-                    for a in batch_axes(mesh):
-                        nb *= mesh.shape[a]
-                    n_pages = -(-n_pages // nb) * nb
-            n_pages = int(n_pages)
-            if n_pages < 2:
-                raise ValueError(f"n_pages={n_pages}: need >= 2 (page 0 is "
-                                 f"the reserved trash page)")
+            max_blocks = config.max_blocks
+            n_pages = config.resolved_n_pages(mesh)
             # NB a pool SMALLER than one full slot (max_blocks + 1 pages) is
             # legal: requests that can never fit it resolve through the
             # oversize policy at admission (reject/truncate/raise), so an
             # under-provisioned pool degrades per-request, never crashes
-        if isinstance(attn_kernel, bool):
-            attn_kernel = "pallas" if attn_kernel else "off"
-        if attn_kernel not in ("off", "pallas"):
-            raise ValueError(f"attn_kernel={attn_kernel!r}: expected 'off' "
-                             f"or 'pallas'")
-        attn_splits = int(attn_splits)
-        if attn_splits < 1:
-            raise ValueError(f"attn_splits={attn_splits} must be >= 1")
         if attn_kernel != "off":
-            if not paged:
-                raise ValueError("attn_kernel requires paged=True (the "
-                                 "kernel walks the page tables)")
             # the flag rides the config: every compiled program built below
             # (tick / chunk / mixed) picks up the kernel dispatch through
             # models.attention, with no engine-level plumbing
             cfg = cfg.replace(paged_attn_kernel=attn_kernel,
-                              paged_attn_splits=attn_splits)
-        kv_quant = bool(kv_quant)
-        kv_bits = int(kv_bits)
+                              paged_attn_splits=config.attn_splits)
         if kv_quant:
-            if not paged:
-                raise ValueError("kv_quant=True requires paged=True (the "
-                                 "compressed page format lives in the pool)")
-            if not 2 <= kv_bits <= 8:
-                raise ValueError(f"kv_bits={kv_bits} must be in [2, 8]")
             # like attn_kernel, the quantized-pool mode rides the config:
             # init_paged_pool emits the codes/scale/tail leaves and
             # models.attention dispatches the quantize-on-write path
@@ -327,7 +289,7 @@ class ServeScheduler:
         self.kv_quant = kv_quant
         self.kv_bits = kv_bits
         self.attn_kernel = attn_kernel
-        self.attn_splits = attn_splits
+        self.attn_splits = config.attn_splits
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -337,16 +299,20 @@ class ServeScheduler:
         self.with_stats = with_stats
         self.tick_steps = tick_steps
         self.mesh = mesh
-        self.oversize = oversize
-        self.chunked = chunked
+        self.oversize = config.oversize
+        self.chunked = config.chunked
         self.chunk_len = chunk_len
         self.paged = paged
         self.page_len = page_len if paged else 0
         self.prefix_cache = prefix_cache
         self._has_ssm = any(k.split("_")[0] == "mamba" for k in cfg.pattern)
-        self.min_prefix_hit = int(page_len if min_prefix_hit is None
-                                  else min_prefix_hit) if paged else 0
+        self.min_prefix_hit = config.min_prefix_hit
         self._needs_chunk_programs = needs_chunk_programs
+        # disaggregation hook (serving/workers.py PrefillEngine): hold
+        # EVERY finishing chunk row out of the same-tick decode scan, so
+        # prefill-only ingestion never generates a token — the cut point
+        # between the prefill and decode engines is post-chunk, pre-decode
+        self._defer_decode = False
 
         # the generate-program LRU serves the per-request parity / baseline
         # path (greedy_generate): size it so one program per (bucket x
@@ -355,6 +321,7 @@ class ServeScheduler:
         # it; pass an explicit generate_cache_size only if this scheduler is
         # the sole greedy_generate consumer in the process (shrinking evicts
         # other callers' live programs).
+        generate_cache_size = config.generate_cache_size
         if generate_cache_size is None:
             generate_cache_size = max(engine.generate_fn.maxsize,
                                       4 * len(buckets) + 16)
@@ -370,7 +337,7 @@ class ServeScheduler:
             # host-side page tables, one row per slot; entry 0 = trash page
             self._table = np.zeros((max_slots, max_blocks), np.int32)
             self._radix = (RadixCache(self._pages,
-                                      snapshot_limit=snapshot_limit)
+                                      snapshot_limit=config.snapshot_limit)
                            if prefix_cache else None)
             # prefix-cache observability (serve_bench --prefix-trace):
             # cached_tokens prompt tokens were served straight from shared
@@ -982,9 +949,11 @@ class ServeScheduler:
                 # boundary, hold the row out of this tick's decode scan and
                 # capture after the tick — it starts decoding next tick with
                 # identical tokens (the logits/state don't change)
-                defer[i] = (finishing[i] and self._wants_snapshot(s)
-                            and s.prefill_pos + take
-                            == self._cacheable_len(s.req.prompt.size))
+                defer[i] = finishing[i] and (
+                    self._defer_decode
+                    or (self._wants_snapshot(s)
+                        and s.prefill_pos + take
+                        == self._cacheable_len(s.req.prompt.size)))
         # a slot whose LAST chunk lands this tick decodes in the same tick:
         # the chunk phase writes its first-token logits before the scan runs
         decode_mask = np.array(
@@ -1263,7 +1232,13 @@ class ServeScheduler:
         self._slots[slot_idx] = slot
         return "ok"
 
-    def _retire(self, slot_idx: int) -> None:
+    def _free_slot(self, slot_idx: int) -> None:
+        """Release ``slot_idx`` WITHOUT recording a result: donate the
+        prompt's pages to the prefix cache, drop the slot's page
+        references, clear the table row and the active bit.  ``_retire``
+        (result-recording retirement) and the prefill engine's
+        export-then-release path (``serving/workers.py`` — the span, not
+        a result, is the output) share this."""
         slot = self._slots[slot_idx]
         if self.paged:
             if self._radix is not None:
@@ -1276,6 +1251,12 @@ class ServeScheduler:
                                    snapshot=slot.snapshot)
             self._pages.release(slot.pages)
             self._table[slot_idx, :] = TRASH_PAGE
+        self._active[slot_idx] = False
+        self._slots[slot_idx] = None
+
+    def _retire(self, slot_idx: int) -> None:
+        slot = self._slots[slot_idx]
+        self._free_slot(slot_idx)
         n = max(slot.frac_steps, 1)
         self._results[slot.req.rid] = RequestResult(
             rid=slot.req.rid,
@@ -1292,5 +1273,3 @@ class ServeScheduler:
             first_token_time=slot.first_token_time,
             finish_time=time.perf_counter(),
         )
-        self._active[slot_idx] = False
-        self._slots[slot_idx] = None

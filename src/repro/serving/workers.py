@@ -1,0 +1,399 @@
+"""Disaggregated serving workers: prefill and decode engines over one
+serialized ``PageSpan`` hand-off.
+
+The paper's thesis is co-location — move computation to the data instead
+of stalling a shared engine (PAPER §III).  Serving-side, the shared
+engine is the combined scheduler: a long prompt's chunk ingestion rides
+the same jitted mixed tick as every in-flight decode, so prefill floods
+inflate decode latency.  Disaggregation splits the roles (ROADMAP open
+item 2):
+
+* :class:`PrefillEngine` ingests ONE prompt at a time into its paged KV
+  pool through the scheduler's existing chunked/bucketed admission paths
+  (prefix-cache hits included — the radix tree lives prefill-side), with
+  decode *held off* (``ServeScheduler._defer_decode``): the cut point is
+  post-chunk, pre-decode, i.e. prompt KV pages + first-token logits and
+  not a single generated token.  The filled slot is exported as a
+  :class:`PageSpan` and immediately released (donating its pages to the
+  prefix cache exactly like a retiring request).
+* :class:`DecodeEngine` imports a span into its OWN pool — fresh pages
+  from its allocator, scatter of the span's page contents, table row,
+  logits row, SSM state, kv_quant tail ring — and ticks it with the
+  unmodified fused decode program until EOS/length retirement.
+
+Both engines are built from the same :class:`~repro.serving.config.
+ServeConfig`, so every compiled program has the same shape as the
+combined scheduler's — and because per-slot decode is masked independent
+of the other rows (the property the whole serve test suite asserts),
+the disaggregated token stream is **bit-equal** to the single-process
+paged scheduler on the same trace (tests/test_disagg.py).
+
+``PageSpan.to_bytes()`` / ``from_bytes()`` is the wire format (framed
+magic + versioned JSON header + raw array payload + CRC32), used by the
+two-process router transport (``serving/router.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import time
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.config import ServeConfig
+from repro.serving.kvpool import TRASH_PAGE, blocks_for_tokens
+from repro.serving.scheduler import (Request, RequestResult, ServeScheduler,
+                                     _Slot)
+
+_MAGIC = b"RPSPAN"
+_SPAN_VERSION = 1
+_U32 = struct.Struct("<I")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype by NAME (``arr.dtype.name``): numpy builtins, with
+    the ml_dtypes extension types (bfloat16, ...) as fallback — jax array
+    dtypes round-trip through their names, never through raw descriptors
+    (which are endianness/registration dependent)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+@dataclasses.dataclass
+class PageSpan:
+    """One prefilled request, serialized: everything the decode engine
+    needs to resume the request in its own pool.
+
+    ``layers`` mirrors the pool's per-layer-group structure: attention
+    groups carry the slot's page CONTENTS gathered out of the prefill
+    pool (``k``/``v`` of shape ``(R, n_blocks, page_len, G, D)`` — or
+    ``k_codes``/``v_codes`` + per-page ``*_scale`` + the slot's dense
+    ``*_tail`` ring under ``kv_quant``), SSM groups carry the slot's
+    recurrent state slice (the snapshot equivalent at the full prompt
+    boundary).  ``hit_len``/``shared_pages`` are the radix metadata of
+    the prefill-side admission (observability — the pages themselves are
+    materialized into the span either way).
+    """
+
+    prompt: np.ndarray                      # (L,) int32 token ids
+    length: int                             # tokens resident in the pages
+    max_new: int
+    eos_id: Optional[int]
+    page_len: int
+    kv_quant: bool
+    kv_bits: int
+    hit_len: int                            # prefix-cache hit at admission
+    shared_pages: int                       # whole pages aliased at admission
+    logits: np.ndarray                      # (V,) first-token logits row
+    layers: Tuple[Dict[str, np.ndarray], ...]
+
+    # ------------------------------------------------------------- wire
+    def _arrays(self) -> List[Tuple[str, np.ndarray]]:
+        out = [("prompt", np.ascontiguousarray(self.prompt)),
+               ("logits", np.ascontiguousarray(self.logits))]
+        for li, group in enumerate(self.layers):
+            for key in sorted(group):
+                out.append((f"layer{li}.{key}",
+                            np.ascontiguousarray(group[key])))
+        return out
+
+    def to_bytes(self) -> bytes:
+        arrays = self._arrays()
+        header = {
+            "version": _SPAN_VERSION,
+            "length": int(self.length),
+            "max_new": int(self.max_new),
+            "eos_id": None if self.eos_id is None else int(self.eos_id),
+            "page_len": int(self.page_len),
+            "kv_quant": bool(self.kv_quant),
+            "kv_bits": int(self.kv_bits),
+            "hit_len": int(self.hit_len),
+            "shared_pages": int(self.shared_pages),
+            "n_groups": len(self.layers),
+            "arrays": [{"name": name, "shape": list(a.shape),
+                        "dtype": a.dtype.name, "nbytes": int(a.nbytes)}
+                       for name, a in arrays],
+        }
+        hdr = json.dumps(header, sort_keys=True).encode("utf-8")
+        payload = b"".join(a.tobytes() for _, a in arrays)
+        body = _MAGIC + _U32.pack(_SPAN_VERSION) + _U32.pack(len(hdr)) + hdr
+        return body + payload + _U32.pack(zlib.crc32(hdr + payload))
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "PageSpan":
+        fixed = len(_MAGIC) + 2 * _U32.size
+        if len(blob) < fixed + _U32.size:
+            raise ValueError(f"truncated PageSpan: {len(blob)} bytes is "
+                             f"shorter than the fixed frame")
+        if blob[:len(_MAGIC)] != _MAGIC:
+            raise ValueError("not a PageSpan (bad magic)")
+        version, = _U32.unpack_from(blob, len(_MAGIC))
+        if version != _SPAN_VERSION:
+            raise ValueError(f"PageSpan wire version {version} (this build "
+                             f"reads version {_SPAN_VERSION})")
+        hdr_len, = _U32.unpack_from(blob, len(_MAGIC) + _U32.size)
+        if len(blob) < fixed + hdr_len + _U32.size:
+            raise ValueError(f"truncated PageSpan: header claims "
+                             f"{hdr_len} bytes, frame is short")
+        hdr = blob[fixed:fixed + hdr_len]
+        payload = blob[fixed + hdr_len:-_U32.size]
+        crc, = _U32.unpack_from(blob, len(blob) - _U32.size)
+        if zlib.crc32(hdr + payload) != crc:
+            raise ValueError("PageSpan corrupt: CRC32 mismatch")
+        header = json.loads(hdr.decode("utf-8"))
+        want = sum(int(d["nbytes"]) for d in header["arrays"])
+        if len(payload) != want:
+            raise ValueError(f"truncated PageSpan: payload {len(payload)} "
+                             f"bytes, manifest claims {want}")
+        arrays: Dict[str, np.ndarray] = {}
+        off = 0
+        for d in header["arrays"]:
+            dt = _np_dtype(d["dtype"])
+            n = int(d["nbytes"])
+            a = np.frombuffer(payload, dtype=dt, count=n // dt.itemsize,
+                              offset=off)
+            arrays[d["name"]] = a.reshape(d["shape"]).copy()
+            off += n
+        layers: List[Dict[str, np.ndarray]] = [
+            {} for _ in range(int(header["n_groups"]))]
+        for name, a in arrays.items():
+            if name.startswith("layer"):
+                li, key = name.split(".", 1)
+                layers[int(li[len("layer"):])][key] = a
+        return cls(prompt=arrays["prompt"], length=int(header["length"]),
+                   max_new=int(header["max_new"]), eos_id=header["eos_id"],
+                   page_len=int(header["page_len"]),
+                   kv_quant=bool(header["kv_quant"]),
+                   kv_bits=int(header["kv_bits"]),
+                   hit_len=int(header["hit_len"]),
+                   shared_pages=int(header["shared_pages"]),
+                   logits=arrays["logits"], layers=tuple(layers))
+
+    @property
+    def n_blocks(self) -> int:
+        return blocks_for_tokens(self.length, self.page_len)
+
+
+def _require_paged(config: ServeConfig, who: str) -> None:
+    if not config.paged:
+        raise ValueError(f"{who} requires a paged ServeConfig (the page "
+                         f"pool is the prefill->decode transfer unit)")
+
+
+class PrefillEngine:
+    """Prompt-ingestion half of the disaggregated pair.
+
+    Wraps a full :class:`ServeScheduler` (same config, same compiled
+    programs as the combined scheduler — the shape identity the
+    bit-equality guarantee rests on) with decode held off: ``prefill``
+    runs the admission + chunk ticks for ONE request in slot 0, exports
+    the filled slot as a :class:`PageSpan`, and releases it — donating
+    the prompt's pages to the prefill-side radix tree, so later prompts
+    hit their shared prefixes exactly like in the combined scheduler.
+    """
+
+    def __init__(self, cfg, params, config: ServeConfig, *, mesh=None):
+        _require_paged(config, "PrefillEngine")
+        self._sched = ServeScheduler(cfg, params, config, mesh=mesh)
+        self._sched._defer_decode = True
+
+    @property
+    def scheduler(self) -> ServeScheduler:
+        return self._sched
+
+    def prefill(self, prompt, max_new: int, eos_id: Optional[int] = None):
+        """Ingest one prompt; returns ``(span, None)`` on success or
+        ``(None, RequestResult)`` when the oversize policy rejected it
+        (``oversize="truncate"`` spans the truncated prompt;
+        ``"raise"`` raises, exactly like scheduler submission)."""
+        s = self._sched
+        rid = s.submit(prompt, max_new=max_new, eos_id=eos_id)
+        if rid in s._results:              # rejected at submission
+            return None, s._results.pop(rid)
+        req = s._queue.popleft()           # possibly truncated
+        status = s._admit(0, req)
+        if status == "drop":
+            return None, s._results.pop(req.rid)
+        assert status == "ok", status      # "wait" needs other live slots
+        # chunk-only ticks until ingestion completes; _defer_decode holds
+        # the finishing row out of the same-tick decode scan, so the slot
+        # lands at phase "decode" with first-token logits and ZERO tokens
+        # (bucketed admissions arrive there with zero ticks)
+        while s._slots[0] is not None and s._slots[0].phase == "prefill":
+            s.step_tick()
+        span = self._export(0, req)
+        s._free_slot(0)                    # donate pages to the radix tree
+        return span, None
+
+    def _export(self, slot_idx: int, req: Request) -> PageSpan:
+        s = self._sched
+        slot = s._slots[slot_idx]
+        pl = s.page_len
+        length = int(req.prompt.size)
+        nb = blocks_for_tokens(length, pl)
+        pages = np.asarray(s._table[slot_idx, :nb], np.int64)
+        layers: List[Dict[str, np.ndarray]] = []
+        for c in s._pool["layers"]:
+            if "ssm" in c:
+                # recurrent state at the full prompt boundary (no decode
+                # step has advanced it — that's the _defer_decode cut)
+                layers.append({k: np.asarray(c[k][:, slot_idx:slot_idx + 1])
+                               for k in c})
+            elif s.kv_quant:
+                group = {}
+                for k in ("k", "v"):
+                    group[f"{k}_codes"] = np.asarray(
+                        c[f"{k}_codes"][:, pages])
+                    group[f"{k}_scale"] = np.asarray(
+                        c[f"{k}_scale"][:, pages])
+                    group[f"{k}_tail"] = np.asarray(
+                        c[f"{k}_tail"][:, slot_idx])
+                layers.append(group)
+            else:
+                layers.append({k: np.asarray(c[k][:, pages])
+                               for k in ("k", "v")})
+        return PageSpan(
+            prompt=np.asarray(req.prompt, np.int32),
+            length=length, max_new=int(req.max_new), eos_id=req.eos_id,
+            page_len=pl, kv_quant=s.kv_quant, kv_bits=s.kv_bits,
+            hit_len=int(slot.hit_len),
+            shared_pages=int(slot.hit_len) // pl,
+            logits=np.asarray(s._logits[slot_idx]),
+            layers=tuple(layers))
+
+
+class DecodeEngine:
+    """Token-generation half of the disaggregated pair.
+
+    Imports :class:`PageSpan`\\ s into its own page pool (fresh pages
+    from its allocator — the pool-to-pool transplant) and drives the
+    unmodified fused decode tick.  Results come back as the scheduler's
+    own :class:`RequestResult`\\ s via :meth:`drain_results`.
+    """
+
+    def __init__(self, cfg, params, config: ServeConfig, *, mesh=None):
+        _require_paged(config, "DecodeEngine")
+        self._sched = ServeScheduler(cfg, params, config, mesh=mesh)
+        # never donate retired prompts to a decode-side radix tree:
+        # retention would pin transplanted pages and starve later imports
+        # — prefix reuse is the prefill engine's job (its tree sees every
+        # prompt before a span exists)
+        self._sched._radix = None
+
+    @property
+    def scheduler(self) -> ServeScheduler:
+        return self._sched
+
+    @property
+    def active(self) -> int:
+        return int(self._sched._active.sum())
+
+    @property
+    def has_free_slot(self) -> bool:
+        return bool((~self._sched._active).any())
+
+    def admit(self, span: PageSpan, rid: int,
+              submit_time: float = float("nan")) -> str:
+        """Import ``span`` into a free slot: ``"ok"`` (ticking now),
+        ``"full"`` (no free slot — tick and retry), ``"wait"`` (slot
+        free but the pool can't cover the span while other imports are
+        in flight — tick and retry), or ``"drop"`` (pool can never
+        cover it; a rejected result was recorded under ``rid``)."""
+        s = self._sched
+        if span.page_len != s.page_len or span.kv_quant != s.kv_quant or (
+                span.kv_quant and span.kv_bits != s.kv_bits):
+            raise ValueError(
+                f"PageSpan/config mismatch: span has page_len="
+                f"{span.page_len} kv_quant={span.kv_quant} kv_bits="
+                f"{span.kv_bits}, decode pool has page_len={s.page_len} "
+                f"kv_quant={s.kv_quant} kv_bits={s.kv_bits}")
+        free = [i for i in range(s.max_slots) if not s._active[i]]
+        if not free:
+            return "full"
+        slot_idx = free[0]
+        # same worst-case sizing as paged admission: prompt + generation
+        # + the junk tail of the finishing tick
+        need_tokens = min(s.max_len,
+                          span.length + span.max_new + s.tick_steps)
+        n_total = max(blocks_for_tokens(need_tokens, s.page_len),
+                      span.n_blocks)
+        pages = s._alloc_pages(n_total)
+        if pages is None:
+            if s._active.any():
+                return "wait"
+            why = (f"decode page pool exhausted: span needs {n_total} "
+                   f"pages, {s._pages.available} free of "
+                   f"{s._pages.capacity}")
+            if s.oversize == "raise":
+                raise ValueError(why)
+            now = time.perf_counter()
+            s._results[rid] = RequestResult(
+                rid=rid, prompt_len=int(span.prompt.size), tokens=[],
+                finish_reason="rejected", admitted_tick=-1,
+                finished_tick=s._tick_count, error=why,
+                submit_time=submit_time, finish_time=now)
+            return "drop"
+        self._import(slot_idx, span, pages)
+        req = Request(rid=rid, prompt=np.asarray(span.prompt, np.int32),
+                      max_new=span.max_new, eos_id=span.eos_id,
+                      submit_time=submit_time)
+        s._slots[slot_idx] = _Slot(req=req, admitted_tick=s._tick_count,
+                                   phase="decode", pages=pages,
+                                   hit_len=span.hit_len)
+        s._active[slot_idx] = True
+        return "ok"
+
+    def _import(self, slot_idx: int, span: PageSpan,
+                pages: List[int]) -> None:
+        """Scatter the span's state into ``slot_idx``: page contents into
+        the freshly-allocated pages, table row, length, logits row, SSM
+        state, and (kv_quant) the dense tail ring — the bit-exact mirror
+        of ``PrefillEngine._export``."""
+        import jax.numpy as jnp
+        s = self._sched
+        idx = np.asarray(pages[:span.n_blocks], np.int64)
+        layers = []
+        for c, grp in zip(s._pool["layers"], span.layers):
+            if "ssm" in c:
+                nc = {k: c[k].at[:, slot_idx:slot_idx + 1].set(
+                    jnp.asarray(grp[k]).astype(c[k].dtype)) for k in c}
+            elif s.kv_quant:
+                nc = dict(c)
+                for k in ("k", "v"):
+                    for part, ax in ((f"{k}_codes", idx),
+                                     (f"{k}_scale", idx)):
+                        nc[part] = c[part].at[:, ax].set(
+                            jnp.asarray(grp[part]).astype(c[part].dtype))
+                    nc[f"{k}_tail"] = c[f"{k}_tail"].at[:, slot_idx].set(
+                        jnp.asarray(grp[f"{k}_tail"]).astype(
+                            c[f"{k}_tail"].dtype))
+            else:
+                nc = {k: c[k].at[:, idx].set(
+                    jnp.asarray(grp[k]).astype(c[k].dtype))
+                    for k in ("k", "v")}
+            layers.append(nc)
+        length = s._pool["length"].at[slot_idx].set(
+            np.int32(span.length))
+        s._pool = {"layers": tuple(layers), "length": length}
+        s._logits = s._logits.at[slot_idx].set(
+            jnp.asarray(span.logits).astype(s._logits.dtype))
+        s._table[slot_idx, :] = TRASH_PAGE
+        s._table[slot_idx, :len(pages)] = pages
+
+    def step(self) -> bool:
+        """One fused decode tick over every live slot (EOS/length
+        retirement included); False when nothing is live."""
+        return self._sched.step_tick()
+
+    def drain_results(self) -> Dict[int, RequestResult]:
+        """Finished results accumulated since the last drain, by rid."""
+        out = self._sched._results
+        self._sched._results = {}
+        return out

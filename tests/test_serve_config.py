@@ -1,0 +1,238 @@
+"""``ServeConfig``: the one frozen, serializable home of every scheduler
+knob.  JSON round-trip over the full shipping-config matrix, canonical
+forms (bool shorthands, bucket dedup) comparing equal, every validation
+moved out of ``ServeScheduler.__init__`` still firing with its message,
+the versioned schema rejecting foreign documents, the legacy 22-kwarg
+constructor shim (DeprecationWarning + byte-identical scheduler), and the
+launcher's flags -> config -> ``--dump-config`` -> ``--config`` loop."""
+
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.serving.config import DEFAULT_BUCKETS, SCHEMA_VERSION, ServeConfig
+
+# every structurally distinct configuration the repo ships: the audit
+# matrix modes, the bench configs, and the launcher-derived shapes
+MATRIX = [
+    ServeConfig(),
+    ServeConfig(max_slots=2, max_len=32, buckets=(8, 16), tick_steps=2),
+    ServeConfig(max_slots=4, max_len=32, buckets=(8, 16), quant="pallas",
+                with_stats=True),
+    ServeConfig(max_slots=4, max_len=32, buckets=(8, 16), chunked="always",
+                chunk_len=8),
+    ServeConfig(max_slots=4, max_len=32, buckets=(8, 16), chunked="auto",
+                chunk_len=8, oversize="truncate"),
+    ServeConfig(max_slots=4, max_len=32, buckets=(8, 16), paged=True,
+                page_len=4, n_pages=34, prefix_cache=True, chunked="auto",
+                chunk_len=8),
+    ServeConfig(max_slots=4, max_len=32, buckets=(8, 16), paged=True,
+                page_len=4, attn_kernel="pallas", attn_splits=2),
+    ServeConfig(max_slots=2, max_len=64, buckets=(8, 16), paged=True,
+                page_len=8, kv_quant=True, kv_bits=4, chunked="auto"),
+    ServeConfig(max_slots=4, max_len=32, buckets=(8, 16), mesh_spec="2x2",
+                generate_cache_size=8, snapshot_limit=4),
+    ServeConfig(max_slots=4, max_len=48, buckets=(8, 16), paged=True,
+                page_len=8, prefix_cache=True, min_prefix_hit=8,
+                chunked="auto", chunk_len=8, oversize="raise"),
+]
+
+
+@pytest.mark.parametrize("cfg", MATRIX, ids=lambda c: f"slots{c.max_slots}-"
+                         f"{c.chunked}-{'paged' if c.paged else 'dense'}-"
+                         f"{'kvq' if c.kv_quant else c.attn_kernel}")
+def test_json_round_trip(cfg):
+    """from_json(to_json(cfg)) == cfg for every shipping config — the
+    property that makes the config safe to ship across processes."""
+    back = ServeConfig.from_json(cfg.to_json())
+    assert back == cfg
+    # and the wire form is stable: serializing the round-tripped config
+    # reproduces the same document
+    assert json.loads(back.to_json()) == json.loads(cfg.to_json())
+
+
+def test_schema_version_on_the_wire():
+    doc = json.loads(ServeConfig().to_json())
+    assert doc["schema"] == SCHEMA_VERSION
+
+
+def test_canonicalization_makes_equivalent_configs_equal():
+    """Bool shorthands expand to mode strings, buckets sort + dedup,
+    chunk_len defaults to the smallest bucket — equivalent spellings are
+    EQUAL, so cross-process config comparison is meaningful."""
+    a = ServeConfig(max_len=128, buckets=(32, 16, 16), chunked=True,
+                    paged=True, page_len=16, attn_kernel=True)
+    b = ServeConfig(max_len=128, buckets=(16, 32), chunked="auto",
+                    chunk_len=16, paged=True, page_len=16,
+                    attn_kernel="pallas")
+    assert a == b
+    assert a.buckets == (16, 32)
+    assert a.chunked == "auto" and a.attn_kernel == "pallas"
+    # dense configs ignore leftover pool knobs (min_prefix_hit zeroes)
+    assert (ServeConfig(min_prefix_hit=7)
+            == ServeConfig(min_prefix_hit=None))
+
+
+def test_defaults_are_the_old_scheduler_defaults():
+    cfg = ServeConfig()
+    assert cfg.max_slots == 8 and cfg.max_len == 256
+    assert cfg.buckets == DEFAULT_BUCKETS
+    assert cfg.chunked == "off" and not cfg.paged and not cfg.kv_quant
+
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(max_slots=0), "max_slots and tick_steps"),
+    (dict(tick_steps=0), "max_slots and tick_steps"),
+    (dict(oversize="drop"), "'reject', 'truncate', or 'raise'"),
+    (dict(buckets=()), "must be non-empty"),
+    (dict(max_len=16, buckets=(8, 32)), "fit max_len"),
+    (dict(chunked="sometimes"), "'off', 'auto', or 'always'"),
+    (dict(max_len=30, buckets=(8,), chunked="auto", chunk_len=8),
+     "multiple of chunk_len"),
+    (dict(max_len=30, buckets=(8,), paged=True, page_len=4),
+     "multiple of page_len"),
+    (dict(paged=True, n_pages=1), "reserved trash page"),
+    (dict(prefix_cache=True), "requires paged=True"),
+    (dict(attn_kernel="pallas"), "requires paged=True"),
+    (dict(attn_kernel="vulkan", paged=True), "'off' or 'pallas'"),
+    (dict(paged=True, attn_splits=0), "must be >= 1"),
+    (dict(kv_quant=True), "requires paged=True"),
+    (dict(kv_quant=True, paged=True, kv_bits=1), "must be in \\[2, 8\\]"),
+    (dict(mesh_spec=object()), "spec STRING"),
+    (dict(quant=object()), "does not serialize"),
+])
+def test_validation(kwargs, match):
+    """Every model-independent check that used to live inline in
+    ``ServeScheduler.__init__`` fires at construction, with its message."""
+    with pytest.raises(ValueError, match=match):
+        ServeConfig(**kwargs)
+
+
+def test_from_json_rejects_foreign_documents():
+    with pytest.raises(ValueError, match="not valid JSON"):
+        ServeConfig.from_json("{nope")
+    with pytest.raises(ValueError, match="expected a JSON object"):
+        ServeConfig.from_json("[1, 2]")
+    with pytest.raises(ValueError, match="schema version 99"):
+        ServeConfig.from_json(json.dumps({"schema": 99}))
+    with pytest.raises(ValueError, match="schema version None"):
+        ServeConfig.from_json(json.dumps({"max_slots": 4}))
+    doc = json.loads(ServeConfig().to_json())
+    doc["n_slots"] = 4  # plausible typo for max_slots
+    with pytest.raises(ValueError, match=r"unknown fields \['n_slots'\]"):
+        ServeConfig.from_json(json.dumps(doc))
+
+
+def test_derived_properties():
+    cfg = ServeConfig(max_slots=2, max_len=32, buckets=(8,), paged=True,
+                      page_len=4, prefix_cache=True, chunked="auto",
+                      chunk_len=8)
+    assert cfg.max_blocks == 8
+    # default pool: slots fully resident + retention headroom + trash page
+    assert cfg.resolved_n_pages() == 2 * 8 + 1 + 8
+    assert dataclasses.replace(cfg, n_pages=34).resolved_n_pages() == 34
+    with pytest.raises(ValueError, match="not a paged config"):
+        _ = ServeConfig().max_blocks
+    assert ServeConfig().resolved_n_pages() == 0
+    assert ServeConfig().make_mesh() is None
+
+
+# --------------------------------------------------------------------------
+# the legacy keyword shim (satellite 1)
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import init_params
+
+    cfg = get_smoke("smollm_135m").replace(dtype=jnp.float32)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def test_legacy_kwargs_shim_warns_and_matches(smoke_model):
+    """The deprecated 22-kwarg constructor routes through ServeConfig:
+    it warns, and the scheduler it builds serves EXACTLY the tokens the
+    config-form scheduler serves."""
+    import numpy as np
+
+    from repro.serving.scheduler import ServeScheduler
+
+    cfg, params = smoke_model
+    with pytest.warns(DeprecationWarning, match="build a serving.ServeConfig"):
+        legacy = ServeScheduler(cfg, params, max_slots=2, max_len=32,
+                                buckets=(8, 16), tick_steps=2)
+    sc = ServeConfig(max_slots=2, max_len=32, buckets=(8, 16), tick_steps=2)
+    assert legacy.serve_config == sc
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        modern = ServeScheduler(cfg, params, sc)  # canonical form: silent
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (5, 8, 12)]
+    for p in prompts:
+        legacy.submit(p, max_new=6)
+        modern.submit(p, max_new=6)
+    for a, b in zip(legacy.run(), modern.run()):
+        assert a.tokens == b.tokens and a.finish_reason == b.finish_reason
+
+
+def test_shim_rejects_mixed_and_unknown_kwargs(smoke_model):
+    from repro.serving.scheduler import ServeScheduler
+
+    cfg, params = smoke_model
+    sc = ServeConfig(max_slots=2, max_len=32, buckets=(8,))
+    with pytest.raises(TypeError, match="EITHER a ServeConfig or"):
+        ServeScheduler(cfg, params, sc, max_slots=4)
+    with pytest.raises(TypeError, match=r"unexpected keyword arguments"):
+        ServeScheduler(cfg, params, max_slotz=4)
+
+
+# --------------------------------------------------------------------------
+# the launcher loop: flags -> config -> --dump-config -> --config
+# --------------------------------------------------------------------------
+
+
+def test_cli_dump_config_round_trip(tmp_path, capsys):
+    """``--dump-config`` commits exactly what the flags derive, and
+    ``--config`` (via ``--dump-config -`` re-emission) loads it back to
+    an equal config — the committed-file workflow, no model built."""
+    from repro.launch.serve import main
+
+    flags = ["--arch", "smollm_135m", "--smoke", "--continuous",
+             "--paged", "--page-len", "8", "--chunked", "--prefix-cache",
+             "--max-slots", "2", "--tick-steps", "2",
+             "--prompt-len", "16", "--new-tokens", "8"]
+    path = tmp_path / "serve.json"
+    main(flags + ["--dump-config", str(path)])
+    cfg = ServeConfig.from_json(path.read_text())
+    assert cfg.paged and cfg.prefix_cache and cfg.chunked == "auto"
+    assert cfg.page_len == 8 and cfg.max_slots == 2
+
+    # loading the committed file wins over the (different!) flags
+    main(["--arch", "smollm_135m", "--smoke", "--continuous",
+          "--max-slots", "7", "--config", str(path), "--dump-config", "-"])
+    assert ServeConfig.from_json(capsys.readouterr().out) == cfg
+
+
+def test_cli_flags_map_to_config(capsys):
+    """build_serve_config is a pure flags->config mapping: quant backend,
+    kv-quant bits, and the lcm pool rounding all land in the config."""
+    from repro.launch.serve import main
+
+    main(["--arch", "smollm_135m", "--smoke", "--continuous",
+          "--quant", "--kv-quant", "3", "--page-len", "4",
+          "--chunked", "--chunk-len", "8", "--prompt-len", "16",
+          "--new-tokens", "8", "--dump-config", "-"])
+    cfg = ServeConfig.from_json(capsys.readouterr().out)
+    assert cfg.quant == "pallas" and cfg.kv_quant and cfg.kv_bits == 3
+    assert cfg.paged  # kv-quant implies paged
+    # ONE lcm rounding: pool is a multiple of both chunk_len and page_len
+    assert cfg.max_len % 8 == 0 and cfg.max_len % 4 == 0

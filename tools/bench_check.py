@@ -130,6 +130,13 @@ def main(argv=None):
     )
     ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
     ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated bench names: check (or --update) just these "
+        "baselines and ignore the rest — for CI jobs that run a single "
+        "bench pass (e.g. --only serve_disagg in the multidevice job)",
+    )
+    ap.add_argument(
         "--update",
         action="store_true",
         help="write/refresh the baseline files from the fresh runs "
@@ -137,9 +144,20 @@ def main(argv=None):
     )
     args = ap.parse_args(argv)
 
+    only = set(args.only.split(",")) if args.only else None
+
     fresh = {}
     for path in args.fresh:
         fresh.update(parse_json_lines(path))
+    if only is not None:
+        missing = only - set(fresh)
+        if missing:
+            print(
+                f"bench_check: --only names {sorted(missing)} but the fresh "
+                f"run produced no '# json' summary for them"
+            )
+            return 2
+        fresh = {b: obj for b, obj in fresh.items() if b in only}
     if not fresh:
         print("bench_check: no '# json' lines found in inputs", flush=True)
         return 2
@@ -169,6 +187,8 @@ def main(argv=None):
         if "rows" not in doc:
             # not a bench baseline — e.g. program_audit.json, the program
             # auditor's budget file (gated by tools/audit.py, not here)
+            continue
+        if only is not None and fn[: -len(".json")] not in only:
             continue
         baselines[fn[: -len(".json")]] = doc
     for bench, base in baselines.items():
